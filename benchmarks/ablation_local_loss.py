@@ -1,0 +1,24 @@
+"""Paper Fig 6: SFPrompt with vs without the phase-1 local-loss update."""
+from __future__ import annotations
+
+from benchmarks.common import row, save
+from benchmarks._train_harness import run_method
+
+
+def run():
+    out, lines = {}, []
+    for arm, use_local in (("with_local_loss", True),
+                           ("without_local_loss", False)):
+        r = run_method("sfprompt", "cifar100-syn", non_iid=False,
+                       use_local_loss=use_local, local_epochs=2)
+        out[arm] = r
+        lines.append(row(f"ablation_local_loss/{arm}", 0.0,
+                         f"best={r['best_acc']:.3f} history={r['history']}"))
+    out["claim_validated"] = (out["with_local_loss"]["best_acc"]
+                              >= out["without_local_loss"]["best_acc"] - 0.02)
+    save("ablation_local_loss", out)
+    return lines
+
+
+if __name__ == "__main__":
+    run()

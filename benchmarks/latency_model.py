@@ -1,0 +1,45 @@
+"""Paper Table 1: per-round latency model for FL / SFL / SFPrompt across
+link-rate and client-compute regimes. Demonstrates the paper's crossover
+claim: SFPrompt wins once |W| > 2*q*gamma/(alpha+tau) * |D| (large models,
+constrained links)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import row, save
+from repro.configs import get_config
+from repro.core.comm import cost_inputs_from, summarize
+from repro.core.split import SplitConfig
+
+
+def run():
+    out, lines = {}, []
+    split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=16,
+                        prune_gamma=0.4)
+    regimes = {
+        "edge_wan": dict(R=12.5e6, P_C=5e12, P_S=500e12),     # 100 Mbps
+        "fiber": dict(R=125e6, P_C=5e12, P_S=500e12),         # 1 Gbps
+        "datacenter": dict(R=12.5e9, P_C=50e12, P_S=5000e12),
+    }
+    for arch in ("vit-base", "vit-large", "stablelm-12b", "nemotron-4-340b"):
+        cfg = get_config(arch)
+        toks = 197 if cfg.arch_type == "vit" else 512
+        for rname, rkw in regimes.items():
+            ci = cost_inputs_from(cfg, split, tokens_per_sample=toks,
+                                  D=1000, K=5, U=10, bytes_smashed=1.0,
+                                  **rkw)
+            s = summarize(ci)
+            lat = {m: s[m]["latency_s"] for m in s}
+            out[f"{arch}/{rname}"] = lat
+            best = min(lat, key=lat.get)
+            lines.append(row(
+                f"latency/{arch}/{rname}", 0.0,
+                f"FL={lat['FL']:.1f}s SFL={lat['SFL']:.1f}s "
+                f"SFPrompt={lat['SFPrompt']:.1f}s best={best}"))
+    # crossover check (Sec 3.5): SFPrompt beats FL when W large
+    save("latency_model", out)
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""§Perf summary: baseline (paper-faithful, untagged dry-run records) vs
+the optimized framework configuration (tag v2: fused loss, last-token
+prefill logits, auto-FSDP threshold, tuned microbatches) across every
+(arch x shape) pair. Prints per-pair collective-bytes and per-device-memory
+deltas; writes results/perf_compare.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, row, save
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+def _load(tag: str):
+    out = {}
+    for path in glob.glob(os.path.join(DRYRUN_DIR, "*.json")):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("mesh") != "pod16x16":
+            continue
+        if (d.get("tag") or "") != tag:
+            continue
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def run():
+    base = _load("")
+    opt = _load("v2")
+    lines, table = [], {}
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        cb = b["collective_bytes"].get("total", 0)
+        co = o["collective_bytes"].get("total", 0)
+        mb = b.get("memory", {}).get("per_device_total_gb") or 0
+        mo = o.get("memory", {}).get("per_device_total_gb") or 0
+        entry = {
+            "collective_bytes": {"base": cb, "v2": co,
+                                 "speedup": (cb / co) if co else None},
+            "per_device_gb": {"base": mb, "v2": mo},
+        }
+        table["|".join(key)] = entry
+        sp = f"{cb/co:.2f}x" if co else "inf"
+        lines.append(row(
+            f"perf_compare/{key[0]}/{key[1]}", 0.0,
+            f"coll {cb:.2e}->{co:.2e} ({sp}) mem {mb}->{mo} GB"))
+    save("perf_compare", table)
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,22 @@
+"""Paper Fig 5: accuracy + tuned-parameter count vs prompt length."""
+from __future__ import annotations
+
+from benchmarks.common import row, save
+from benchmarks._train_harness import run_method
+
+
+def run():
+    out, lines = {}, []
+    for plen in (2, 8, 32):
+        r = run_method("sfprompt", "cifar100-syn", non_iid=False,
+                       prompt_len=plen)
+        out[plen] = {"acc": r["best_acc"], "tuned": r["tuned_params"]}
+        lines.append(row(f"prompt_length/p={plen}", 0.0,
+                         f"best={r['best_acc']:.3f} "
+                         f"tuned={r['tuned_params']}"))
+    save("prompt_length", out)
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,153 @@
+"""Roofline assembly (deliverable g): per (arch x shape x mesh) table from
+the dry-run artifacts in benchmarks/results/dryrun/.
+
+Terms (seconds, per production step):
+  compute_s    = HLO_FLOPs / (chips x 197 TFLOP/s)   [global flops / fleet]
+  memory_hlo_s = HLO_bytes / (chips x 819 GB/s)      [UNFUSED upper bound:
+                 pre-optimization HLO counts every intermediate]
+  memory_est_s = analytic TPU-fused estimate (params read once per pass,
+                 activations once per layer boundary, flash-attention-style
+                 attention traffic, KV cache read per decode step)
+  collective_s = trip-count-corrected collective bytes / 50 GB/s ICI
+                 (x2(n-1)/n ring amplification applied for all-reduce)
+
+Bottleneck classification uses (compute_s, memory_est_s, collective_s).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, row, save
+from repro.configs import get_config
+from repro.core.split import SplitConfig, SplitModel
+from repro.launch.dryrun import default_split_for
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.specs import SHAPES
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+def analytic_memory_bytes(cfg, shape, n_chips: int, microbatches: int,
+                          kind: str) -> float:
+    """Per-device HBM traffic estimate for one step, assuming TPU-grade
+    fusion (attention via the flash kernel: q/k/v/o only)."""
+    att = cfg.attention
+    D = cfg.d_model
+    L = cfg.n_layers
+    # params: frozen bf16 read twice (fwd+bwd) per microbatch pass;
+    # trainable f32 read+written with grads+momentum
+    params = cfg.param_count()
+    ptraffic = params * 2 * (2 * microbatches if kind == "train" else 1)
+    if kind == "train":
+        tail_frac = 1.0 / max(cfg.n_cycles, 2)
+        ptraffic += params * tail_frac * 4 * 4   # f32 param/grad/mom traffic
+
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq
+        passes = 4.0  # fwd write + bwd read + remat recompute
+    elif kind == "prefill":
+        tokens = shape.global_batch * shape.seq
+        passes = 2.0
+    else:
+        tokens = shape.global_batch
+        passes = 2.0
+    act = tokens * D * 2 * passes * L
+
+    attn = 0.0
+    cache = 0.0
+    if att is not None:
+        n_attn = L
+        kvdim = 2 * att.n_kv_heads * att.head_dim
+        if att.mla:
+            kvdim = att.mla.kv_lora_rank + att.mla.qk_rope_head_dim
+        if kind in ("train", "prefill"):
+            attn = tokens * (att.q_dim + kvdim + att.q_dim) * 2 * n_attn
+        else:
+            w = shape.seq
+            if shape.name == "long_500k" and cfg.long_context_window:
+                w = cfg.long_context_window
+            cache = shape.global_batch * w * kvdim * 2 * n_attn
+    if cfg.mamba2 is not None and kind == "decode":
+        m = cfg.mamba2
+        cache += (shape.global_batch * m.n_heads(D) * m.head_dim *
+                  m.d_state * 4 * L)
+    if cfg.rwkv6 is not None and kind == "decode":
+        r6 = cfg.rwkv6
+        cache += (shape.global_batch * (D // r6.head_size) * r6.head_size ** 2
+                  * 4 * L)
+
+    logits = 0.0
+    if kind == "train":
+        logits = tokens * cfg.vocab_size * 4 * 2
+    elif kind == "decode":
+        logits = shape.global_batch * cfg.vocab_size * 4
+
+    return (ptraffic + act + attn + cache + logits) / n_chips
+
+
+def run():
+    lines = []
+    table = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("tag"):
+            continue
+        arch, shp, mesh = d["arch"], d["shape"], d["mesh"]
+        cfg = get_config(arch)
+        shape = SHAPES[shp]
+        n = d["n_chips"]
+        flops_g = d.get("hlo_flops_global", 0.0)
+        # HloCostAnalysis counts ragged_dot (grouped GEMM) as a DENSE dot
+        # over all E expert groups; only top_k paths execute. Subtract the
+        # phantom (E-1)/E share of the three grouped GEMMs per MoE layer.
+        if cfg.moe is not None and flops_g:
+            e = cfg.moe
+            if shape.kind == "train":
+                toks = shape.global_batch * shape.seq
+                grad_mult = 3.0   # fwd + dgrad + wgrad-DCE'd? dgrad only: 2
+            elif shape.kind == "prefill":
+                toks, grad_mult = shape.global_batch * shape.seq, 1.0
+            else:
+                toks, grad_mult = shape.global_batch, 1.0
+            n_moe = cfg.n_cycles  # moe layers
+            dense_ragged = (2 * toks * e.top_k * cfg.d_model * e.d_ff_expert
+                            * 3 * e.n_experts * n_moe * grad_mult)
+            phantom = dense_ragged * (e.n_experts - 1) / e.n_experts
+            flops_g = max(flops_g - phantom, flops_g / e.n_experts)
+        compute_s = flops_g / (n * PEAK_FLOPS_BF16)
+        mem_hlo_s = d.get("hlo_bytes_global", 0.0) / (n * HBM_BW)
+        mem_est = analytic_memory_bytes(cfg, shape, n,
+                                        d.get("microbatches", 1), d["kind"])
+        mem_est_s = mem_est / HBM_BW
+        coll = d.get("collective_bytes", {})
+        ar = coll.get("all-reduce", 0) * 2  # ring 2(n-1)/n ~ 2
+        other = sum(v for k, v in coll.items()
+                    if k not in ("all-reduce", "total"))
+        coll_s = (ar + other) / ICI_BW
+        terms = {"compute_s": compute_s, "memory_est_s": mem_est_s,
+                 "collective_s": coll_s}
+        bottleneck = max(terms, key=terms.get)
+        mf = d.get("model_flops", 0.0)
+        useful = mf / flops_g if flops_g else 0.0
+        entry = {**terms, "memory_hlo_upper_s": mem_hlo_s,
+                 "bottleneck": bottleneck, "model_flops": mf,
+                 "useful_flops_frac": useful,
+                 "per_device_gb": d.get("memory", {}).get(
+                     "per_device_total_gb"),
+                 "compile_s": d.get("compile_s")}
+        table[f"{arch}|{shp}|{mesh}"] = entry
+        if mesh == "pod16x16":
+            lines.append(row(
+                f"roofline/{arch}/{shp}", 0.0,
+                f"bottleneck={bottleneck.replace('_s','')} "
+                f"compute={compute_s:.2e}s mem={mem_est_s:.2e}s "
+                f"coll={coll_s:.2e}s useful={useful:.2f}"))
+    save("roofline", table)
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Benchmark driver: one function per paper table/figure + the roofline.
+Prints ``name,us_per_call,derived`` CSV lines and writes JSON artifacts to
+benchmarks/results/. Set REPRO_BENCH_FAST=1 for a quick pass."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (ablation_local_loss, ablation_pruning, accuracy,
+                            comm_cost, compute_burden, kernel_microbench,
+                            latency_model, perf_compare, prompt_length,
+                            roofline)
+    suites = [
+        ("comm_cost (Table 2 / Fig 2)", comm_cost.run),
+        ("compute_burden (Table 2)", compute_burden.run),
+        ("latency_model (Table 1)", latency_model.run),
+        ("roofline (deliverable g)", roofline.run),
+        ("perf_compare (baseline vs optimized)", perf_compare.run),
+        ("kernel_microbench", kernel_microbench.run),
+        ("accuracy (Table 3 / Fig 4)", accuracy.run),
+        ("prompt_length (Fig 5)", prompt_length.run),
+        ("ablation_local_loss (Fig 6)", ablation_local_loss.run),
+        ("ablation_pruning (Fig 7)", ablation_pruning.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites:
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print(f"# {len(failures)} benchmark suites FAILED: {failures}")
+        sys.exit(1)
+    print("# all benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Split-inference serving demo: the fine-tuned model served across the
+client/server boundary — client head (+prompt from the cache), server body,
+client tail — with batched requests, a prefill + decode loop, and a
+ring-buffer KV cache (the long_500k mechanism, scaled down).
+
+  PYTHONPATH=src python examples/split_serve.py [--arch gemma2-9b]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import SplitConfig, SplitModel
+from repro.launch.steps import make_decode_step, make_prefill_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-tokens", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--window", type=int, default=32,
+                    help="ring-buffer KV window (long-context mechanism)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced(n_layers=6)
+    split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=4)
+    model = SplitModel(cfg, split)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"{cfg.name}: serving with head|body|tail = "
+          f"{model.n_head_layers}|{model.n_body_layers}|{model.n_tail_layers}"
+          f" layers, ring window={args.window}")
+
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model))
+
+    B = args.batch
+    reqs = jax.random.randint(jax.random.PRNGKey(1),
+                              (B, args.prompt_tokens), 0, cfg.vocab_size)
+    batch = {"tokens": reqs}
+    if cfg.arch_type == "vlm":
+        batch["patch_embeds"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(2), (B, 8, cfg.d_model))
+    if cfg.arch_type == "audio":
+        batch["frames"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.encoder.n_frames, cfg.d_model))
+
+    cache = model.init_cache(B, seq_len=args.prompt_tokens + args.new_tokens
+                             + split.prompt_len, window=args.window)
+    t0 = time.time()
+    logits, cache = prefill(params, batch, cache)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    print(f"prefill {B}x{args.prompt_tokens} in {time.time()-t0:.2f}s")
+
+    extra = split.prompt_len + (8 if cfg.arch_type == "vlm" else 0)
+    outs = [tok]
+    t0 = time.time()
+    for i in range(args.new_tokens - 1):
+        pos = jnp.full((B,), args.prompt_tokens + extra + i, jnp.int32)
+        tok, logits, cache = decode(params, {"tokens": tok[:, None],
+                                             "pos": pos}, cache)
+        outs.append(tok)
+    dt = time.time() - t0
+    gen = jnp.stack(outs, 1)
+    print(f"decoded {B}x{args.new_tokens} tokens in {dt:.2f}s "
+          f"({B * args.new_tokens / dt:.1f} tok/s on 1 CPU core)")
+    print("generations (token ids):")
+    for b in range(B):
+        print(" ", gen[b].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.io import (  # noqa: F401
+    latest_checkpoint, load_checkpoint, save_checkpoint)

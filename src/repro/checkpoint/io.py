@@ -1,0 +1,64 @@
+"""Checkpointing: nested-dict pytrees <-> npz files.
+
+Paths are flattened with '/' separators; arrays are gathered to host before
+saving (call inside jax.experimental.multihost_utils barriers on real
+multi-host — on this single-process simulator a plain device_get suffices).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif tree is None:
+        out[prefix[:-1] + "~none"] = np.zeros((0,))
+    else:
+        out[prefix[:-1]] = np.asarray(jax.device_get(tree))
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
+    tree: Dict[str, Any] = {}
+    for path, v in flat.items():
+        if path.endswith("~none"):
+            path, v = path[: -len("~none")].rstrip("/"), None
+        node = tree
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def save_checkpoint(path: str, tree: Any, *, step: Optional[int] = None) -> str:
+    if step is not None:
+        path = os.path.join(path, f"ckpt_{step:08d}.npz")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+    return path
+
+
+def load_checkpoint(path: str) -> Any:
+    with np.load(path, allow_pickle=False) as z:
+        return _unflatten({k: z[k] for k in z.files})
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    pat = re.compile(r"ckpt_(\d+)\.npz$")
+    best, best_step = None, -1
+    for f in os.listdir(ckpt_dir):
+        m = pat.match(f)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(ckpt_dir, f), int(m.group(1))
+    return best

@@ -1,0 +1,15 @@
+"""SFPrompt core: the paper's contribution as composable JAX modules.
+
+  split.py        — three-way model partition W = [W_h | W_b | W_t]
+  protocol.py     — the three-phase training round (self-update, split
+                    training, aggregation) with first-class clients
+  local_update.py — phase-1 local-loss updates (Eq. 1)
+  pruning.py      — phase-1 EL2N dataset pruning (Eq. 2)
+  aggregation.py  — phase-3 weighted FedAvg (Eq. 3)
+  losses.py       — task losses + per-sample EL2N glue
+  comm.py         — the Table-1 analytical cost model
+  baselines.py    — FL, SFL+FF, SFL+Linear comparison trainers
+"""
+from repro.core.split import SplitConfig, SplitModel  # noqa: F401
+from repro.core.protocol import ProtocolConfig, SFPromptTrainer  # noqa: F401
+from repro.core.baselines import BaselineConfig, FLTrainer, SFLTrainer  # noqa: F401

@@ -1,0 +1,30 @@
+"""Phase-3 parameter aggregation (SFPrompt Sec. 3.4, Eq. (3)).
+
+Sample-count-weighted FedAvg of the tail model and prompt parameters across
+the K selected clients. Under pjit with the client axis sharded over
+('pod','data'), the weighted mean lowers to exactly one all-reduce —
+the mesh-native image of the paper's server-side aggregation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg(client_trees, weights: jnp.ndarray):
+    """client_trees: pytree with leading client axis K on every leaf.
+    weights: (K,) sample counts n_k; normalized internally."""
+    w = weights.astype(jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1e-9)
+
+    def mean(x):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.sum(wb * x.astype(jnp.float32), axis=0).astype(x.dtype)
+
+    return jax.tree.map(mean, client_trees)
+
+
+def broadcast_to_clients(tree, k: int):
+    """Replicate aggregated params back to K per-client copies."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), tree)

@@ -1,0 +1,199 @@
+"""Baselines the paper compares against (Sec. 4.1).
+
+  FL          — FedAvg full fine-tuning: every client trains the ENTIRE
+                model locally for U epochs; all parameters aggregate.
+  SFL+FF      — SplitFed [Thapa et al. 2022] with full fine-tuning: client
+                parts (head+tail) train per-client, the server body trains
+                on the mean gradient across the parallel clients.
+  SFL+Linear  — SplitFed, only the final linear (task head) trains.
+
+(SFPrompt-without-local-loss — the Fig. 6 ablation — is ProtocolConfig
+(use_local_loss=False); SFPrompt-without-pruning is use_pruning=False.)
+
+All baselines reuse the SplitModel forward; they differ only in which
+subtrees receive gradients and in the cost-model entries (core/comm.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+from repro.core.aggregation import broadcast_to_clients, fedavg
+from repro.core.split import SplitModel
+from repro.optim import Optimizer, apply_updates, sgd
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class BaselineConfig:
+    local_epochs: int = 10       # U (FL); SFL interacts per batch anyway
+    batch_size: int = 16
+    lr: float = 1e-2
+    momentum: float = 0.9
+    impl: str = "ref"
+
+
+def _batched(data, batch_size):
+    n = jax.tree.leaves(data)[0].shape[0]
+    nb = max(1, n // batch_size)
+    return jax.tree.map(
+        lambda x: x[: nb * batch_size].reshape(
+            (nb, batch_size) + x.shape[1:]), data), nb
+
+
+def _full_loss(model: SplitModel, params, batch, *, impl, prompt=None):
+    out = model.forward(params, batch, route="split", mode="train",
+                        impl=impl, prompt=(prompt if prompt is not None
+                                           else jnp.zeros((0, model.cfg.d_model))))
+    return losses.task_loss(model.cfg, out, batch, impl=impl)
+
+
+class FLTrainer:
+    """FedAvg full fine-tuning (no prompts, no split execution benefit)."""
+
+    def __init__(self, model: SplitModel, bcfg: BaselineConfig):
+        self.model, self.bcfg = model, bcfg
+        self.opt = sgd(bcfg.lr, momentum=bcfg.momentum)
+        self._round_jit = jax.jit(self._round)
+
+    def init(self, key) -> Params:
+        p = self.model.init(key)
+        return {"params": p, "round": jnp.zeros((), jnp.int32)}
+
+    def _local(self, trainable, opt_state, data):
+        bcfg = self.bcfg
+        batched, nb = _batched(data, bcfg.batch_size)
+        grad_fn = jax.value_and_grad(
+            lambda tr, b: _full_loss(self.model, tr, b, impl=bcfg.impl)[0])
+
+        def one_batch(carry, batch):
+            tr, os, acc = carry
+            loss, g = grad_fn(tr, batch)
+            upd, os = self.opt.update(g, os, tr)
+            return (apply_updates(tr, upd), os, acc + loss), None
+
+        def one_epoch(carry, _):
+            carry, _ = jax.lax.scan(one_batch, carry, batched)
+            return carry, None
+
+        (trainable, opt_state, acc), _ = jax.lax.scan(
+            one_epoch, (trainable, opt_state, jnp.float32(0.0)), None,
+            length=bcfg.local_epochs)
+        return trainable, acc / (bcfg.local_epochs * nb)
+
+    def _round(self, state, client_data):
+        params = state["params"]
+        K = jax.tree.leaves(client_data)[0].shape[0]
+        full = {"head": params["head"], "body": params["body"],
+                "tail": params["tail"]}  # FL has no prompts
+        per_client = broadcast_to_clients(full, K)
+        opt_state = jax.vmap(self.opt.init)(per_client)
+        trained, loss = jax.vmap(
+            lambda tr, os, d: self._local(tr, os, d))(
+                per_client, opt_state, client_data)
+        n = jax.tree.leaves(client_data)[0].shape[1]
+        agg = fedavg(trained, jnp.full((K,), n, jnp.float32))
+        new = dict(params)
+        new.update({k: agg[k] for k in ("head", "body", "tail")})
+        return ({"params": new, "round": state["round"] + 1},
+                {"train_loss": loss.mean()})
+
+    def round(self, state, client_data):
+        state, m = self._round_jit(state, client_data)
+        return state, {k: float(v) for k, v in m.items()}
+
+
+class SFLTrainer:
+    """SplitFed [Thapa et al. 2022]. mode='ff' trains head+tail (per-client)
+    + body (server, mean gradient); mode='linear' trains only the task head."""
+
+    def __init__(self, model: SplitModel, bcfg: BaselineConfig,
+                 mode: str = "ff"):
+        assert mode in ("ff", "linear")
+        self.model, self.bcfg, self.mode = model, bcfg, mode
+        self.opt_client = sgd(bcfg.lr, momentum=bcfg.momentum)
+        self.opt_server = sgd(bcfg.lr, momentum=bcfg.momentum)
+        self._round_jit = jax.jit(self._round)
+
+    def init(self, key) -> Params:
+        p = self.model.init(key)
+        return {"params": p, "round": jnp.zeros((), jnp.int32)}
+
+    def _client_trainable(self, params):
+        if self.mode == "linear":
+            return {"tail": {"head": params["tail"]["head"]}}
+        return {"head": params["head"], "tail": params["tail"]}
+
+    def _merge(self, params, client_tr):
+        new = dict(params)
+        if self.mode == "linear":
+            tail = dict(params["tail"])
+            tail["head"] = client_tr["tail"]["head"]
+            new["tail"] = tail
+        else:
+            new["head"] = client_tr["head"]
+            new["tail"] = client_tr["tail"]
+        return new
+
+    def _loss(self, body, client_tr, params, batch):
+        merged = self._merge(params, client_tr)
+        merged["body"] = body
+        return _full_loss(self.model, merged, batch, impl=self.bcfg.impl)[0]
+
+    def _round(self, state, client_data):
+        model, bcfg = self.model, self.bcfg
+        params = state["params"]
+        K = jax.tree.leaves(client_data)[0].shape[0]
+        n = jax.tree.leaves(client_data)[0].shape[1]
+
+        client_tr = broadcast_to_clients(self._client_trainable(params), K)
+        client_os = jax.vmap(self.opt_client.init)(client_tr)
+        body = params["body"]
+        train_body = self.mode == "ff"
+        body_os = self.opt_server.init(body) if train_body else None
+
+        batched, nb = _batched(
+            jax.tree.map(lambda x: x.swapaxes(0, 1), client_data),
+            bcfg.batch_size)
+        # batched leaves: (nb, batch, K, ...) -> per-step (batch, K, ...)
+
+        grad_fn = jax.value_and_grad(self._loss, argnums=(0, 1))
+
+        def one_batch(carry, batch_k):
+            body, body_os, ctr, cos, acc = carry
+            # per-client grads: vmap over K (body broadcast)
+            batch_by_client = jax.tree.map(
+                lambda x: x.swapaxes(0, 1), batch_k)   # (K, batch, ...)
+            (loss, (gb, gc)) = jax.vmap(
+                lambda tr, b: grad_fn(body, tr, params, b),
+                in_axes=(0, 0))(ctr, batch_by_client)
+            upd, cos = jax.vmap(self.opt_client.update)(gc, cos, ctr)
+            ctr = apply_updates(ctr, upd)
+            if train_body:
+                gb_mean = jax.tree.map(lambda g: g.mean(0), gb)
+                bupd, body_os = self.opt_server.update(gb_mean, body_os, body)
+                body = apply_updates(body, bupd)
+            return (body, body_os, ctr, cos, acc + loss.mean()), None
+
+        def one_epoch(carry, _):
+            carry, _ = jax.lax.scan(one_batch, carry, batched)
+            return carry, None
+
+        (body, body_os, client_tr, client_os, acc), _ = jax.lax.scan(
+            one_epoch, (body, body_os, client_tr, client_os,
+                        jnp.float32(0.0)), None, length=bcfg.local_epochs)
+
+        agg = fedavg(client_tr, jnp.full((K,), n, jnp.float32))
+        new = self._merge(params, agg)
+        new["body"] = body
+        return ({"params": new, "round": state["round"] + 1},
+                {"train_loss": acc / (bcfg.local_epochs * nb)})
+
+    def round(self, state, client_data):
+        state, m = self._round_jit(state, client_data)
+        return state, {k: float(v) for k, v in m.items()}

@@ -1,0 +1,206 @@
+"""The SFPrompt three-phase protocol (Sec. 3, Fig. 3, Algorithms 1-2).
+
+Per global round r:
+  Phase 1 — client self-update: U local-loss epochs on (W_t, p) with the
+            body skipped (zero server traffic), then EL2N dataset pruning.
+  Phase 2 — split training over the pruned subset: head (client, frozen) ->
+            body (server, frozen) -> tail (client, trainable); prompt grads
+            flow back through the frozen body exactly as the paper's relayed
+            backward signals — jax.grad through the chain is byte-identical
+            mathematics.
+  Phase 3 — sample-count-weighted FedAvg of (W_t, p).
+
+Clients are FIRST-CLASS: every client-side tensor carries a leading client
+axis K, all client math is vmapped over it (true per-client divergence), and
+on a mesh that axis shards over ('pod','data') — see launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses, pruning
+from repro.core.aggregation import broadcast_to_clients, fedavg
+from repro.core.local_update import local_epochs, local_loss_fn
+from repro.core.split import SplitModel
+from repro.optim import Optimizer, adamw, apply_updates, sgd
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class ProtocolConfig:
+    clients_per_round: int = 5       # K
+    local_epochs: int = 10           # U (phase 1)
+    split_epochs: int = 1            # passes over pruned data (phase 2)
+    batch_size: int = 16
+    lr_local: float = 1e-2
+    lr_split: float = 1e-2
+    optimizer: str = "sgd"           # sgd | adamw
+    momentum: float = 0.9
+    impl: str = "ref"
+    use_pruning: bool = True
+    use_local_loss: bool = True      # False => the Fig-6 ablation arm
+
+
+def make_optimizer(pcfg: ProtocolConfig, lr: float) -> Optimizer:
+    if pcfg.optimizer == "adamw":
+        return adamw(lr)
+    return sgd(lr, momentum=pcfg.momentum)
+
+
+class SFPromptTrainer:
+    def __init__(self, model: SplitModel, pcfg: ProtocolConfig):
+        self.model = model
+        self.pcfg = pcfg
+        self.opt_local = make_optimizer(pcfg, pcfg.lr_local)
+        self.opt_split = make_optimizer(pcfg, pcfg.lr_split)
+        self._round_jit = jax.jit(self._round)
+        self._eval_jit = jax.jit(self._eval_batches)
+
+    # ------------------------------------------------------------- state
+    def init(self, key) -> Params:
+        return {"params": self.model.init(key),
+                "round": jnp.zeros((), jnp.int32)}
+
+    # ------------------------------------------------------------- phase 2
+    def _split_loss(self, params_frozen, trainable, batch):
+        model, pcfg = self.model, self.pcfg
+        ho = model.head_fwd(params_frozen["head"], trainable["prompt"], batch,
+                            mode="train", impl=pcfg.impl)
+        bo = model.body_fwd(params_frozen["body"], ho["smashed"], ho)
+        to = model.tail_fwd(trainable["tail"], bo["smashed"], ho, batch)
+        out = {"logits": to["logits"], "n_prefix": to.get("n_prefix", 0),
+               "aux": ho["aux"] + bo["aux"] + to["aux"]}
+        return losses.task_loss(model.cfg, out, batch, impl=pcfg.impl)
+
+    def _split_epochs(self, frozen, trainable, opt_state, data):
+        pcfg = self.pcfg
+        n = jax.tree.leaves(data)[0].shape[0]
+        nb = max(1, n // pcfg.batch_size)
+        batched = jax.tree.map(
+            lambda x: x[: nb * pcfg.batch_size].reshape(
+                (nb, pcfg.batch_size) + x.shape[1:]), data)
+        grad_fn = jax.value_and_grad(
+            lambda tr, b: self._split_loss(frozen, tr, b)[0])
+
+        def one_batch(carry, batch):
+            tr, os, acc = carry
+            loss, grads = grad_fn(tr, batch)
+            updates, os = self.opt_split.update(grads, os, tr)
+            tr = apply_updates(tr, updates)
+            return (tr, os, acc + loss), None
+
+        def one_epoch(carry, _):
+            carry, _ = jax.lax.scan(one_batch, carry, batched)
+            return carry, None
+
+        (trainable, opt_state, acc), _ = jax.lax.scan(
+            one_epoch, (trainable, opt_state, jnp.float32(0.0)),
+            None, length=pcfg.split_epochs)
+        return trainable, opt_state, acc / (pcfg.split_epochs * nb)
+
+    # ------------------------------------------------------------- round
+    def _round(self, state: Params, client_data) -> Tuple[Params, Dict]:
+        """client_data: pytree with leading (K, n_local, ...) axes."""
+        model, pcfg = self.model, self.pcfg
+        params = state["params"]
+        K = jax.tree.leaves(client_data)[0].shape[0]
+        n_local = jax.tree.leaves(client_data)[0].shape[1]
+
+        trainable = broadcast_to_clients(
+            {"tail": params["tail"], "prompt": params["prompt"]}, K)
+        metrics: Dict[str, Any] = {}
+
+        # ---- Phase 1a: local-loss self-update (vmap over clients; head
+        # broadcast for batched-operand vmap rules)
+        if pcfg.use_local_loss and pcfg.local_epochs > 0:
+            opt_state = jax.vmap(self.opt_local.init)(trainable)
+            head_k = broadcast_to_clients(params["head"], K)
+
+            def one_client(hd, tr, os, d):
+                return local_epochs(
+                    model, hd, tr, self.opt_local, os, d,
+                    batch_size=pcfg.batch_size, n_epochs=pcfg.local_epochs,
+                    impl=pcfg.impl)
+
+            trainable, opt_state, local_loss = jax.vmap(one_client)(
+                head_k, trainable, opt_state, client_data)
+            metrics["local_loss"] = local_loss.mean()
+
+        # ---- Phase 1b: EL2N pruning (vmap over clients)
+        if pcfg.use_pruning and model.split.prune_gamma > 0:
+            head_k = broadcast_to_clients(params["head"], K)
+
+            def score_one(hd, tr, d):
+                return pruning.score_client_data(
+                    model, hd, tr["tail"], tr["prompt"], d,
+                    batch_size=pcfg.batch_size, impl=pcfg.impl)
+
+            scores = jax.vmap(score_one)(head_k, trainable, client_data)
+            gamma = model.split.prune_gamma
+            keep = max(pcfg.batch_size,
+                       n_local - int(gamma * n_local))
+            keep -= keep % pcfg.batch_size
+            order = jnp.argsort(-scores, axis=1)[:, :keep]
+            pruned = jax.tree.map(
+                lambda x: jnp.take_along_axis(
+                    x, order.reshape((K, keep) + (1,) * (x.ndim - 2)),
+                    axis=1) if x.ndim > 2 else
+                jnp.take_along_axis(x, order, axis=1),
+                client_data)
+            metrics["el2n_mean"] = scores.mean()
+            metrics["kept_frac"] = keep / n_local
+        else:
+            pruned, keep = client_data, n_local
+
+        # ---- Phase 2: split training (vmap over clients; frozen segments
+        # broadcast so MoE ragged ops see batched operands)
+        opt_state = jax.vmap(self.opt_split.init)(trainable)
+        frozen_k = broadcast_to_clients(
+            {"head": params["head"], "body": params["body"]}, K)
+
+        def split_one(fz, tr, os, d):
+            return self._split_epochs(fz, tr, os, d)
+
+        trainable, opt_state, split_loss = jax.vmap(split_one)(
+            frozen_k, trainable, opt_state, pruned)
+        metrics["split_loss"] = split_loss.mean()
+
+        # ---- Phase 3: weighted FedAvg of (tail, prompt)
+        weights = jnp.full((K,), keep, jnp.float32)
+        agg = fedavg(trainable, weights)
+        new_params = dict(params)
+        new_params["tail"] = agg["tail"]
+        new_params["prompt"] = agg["prompt"]
+
+        return ({"params": new_params, "round": state["round"] + 1}, metrics)
+
+    def round(self, state: Params, client_data) -> Tuple[Params, Dict]:
+        state, metrics = self._round_jit(state, client_data)
+        return state, {k: float(v) for k, v in metrics.items()}
+
+    # ------------------------------------------------------------- eval
+    def _eval_batches(self, params, batched):
+        def one(carry, batch):
+            out = self.model.forward(params, batch, route="split",
+                                     mode="train", impl=self.pcfg.impl)
+            loss, m = losses.task_loss(self.model.cfg, out, batch,
+                                       impl=self.pcfg.impl)
+            return carry, (m["ce"], m["acc"])
+
+        _, (ce, acc) = jax.lax.scan(one, None, batched)
+        return ce.mean(), acc.mean()
+
+    def evaluate(self, params: Params, data, *, batch_size: int = 32) -> Dict:
+        n = jax.tree.leaves(data)[0].shape[0]
+        nb = max(1, n // batch_size)
+        batched = jax.tree.map(
+            lambda x: x[: nb * batch_size].reshape(
+                (nb, batch_size) + x.shape[1:]), data)
+        ce, acc = self._eval_jit(params, batched)
+        return {"ce": float(ce), "acc": float(acc)}

@@ -1,0 +1,361 @@
+"""Three-way model split W = [W_h | W_b | W_t] (SFPrompt Sec. 3.1).
+
+The head (embedding frontend + the first layers) and the tail (last layers +
+final norm + task head) live on the CLIENT; the body (everything between)
+lives on the SERVER. Split points land on layer-pattern cycle boundaries so
+every segment scans homogeneously. Per the paper the split is dynamic —
+`SplitConfig.head_cycles/tail_cycles` choose it per deployment.
+
+Segment placement notes (DESIGN.md §Arch-applicability):
+  - deepseek-v3: the 3 dense prefix layers belong to the head.
+  - whisper: the (stubbed-frontend) encoder is client-side feature
+    extraction, so it lives in the head segment.
+  - zamba2: the shared attention block's weights are *replicated* into every
+    segment that contains one of its sites; only the tail's copy is
+    trainable, mirroring what a physical split forces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.transformer import (apply_block, init_block,
+                                      init_block_cache, init_stack, run_stack,
+                                      stack_cache)
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class SplitConfig:
+    head_cycles: int = 1          # cycles of the layer pattern in W_h
+    tail_cycles: int = 1          # cycles in W_t
+    prompt_len: int = 16          # p — soft prompt tokens (VPT-style)
+    prune_gamma: float = 0.5      # fraction of local data PRUNED away
+    local_epochs: int = 10        # U — phase-1 self-update epochs
+    capacity_note: str = ""
+
+
+class SplitModel:
+    def __init__(self, cfg: ModelConfig, split: SplitConfig):
+        if split.head_cycles + split.tail_cycles >= cfg.n_cycles:
+            raise ValueError(
+                f"{cfg.name}: head({split.head_cycles}) + tail"
+                f"({split.tail_cycles}) cycles must leave a non-empty body"
+                f" out of {cfg.n_cycles}")
+        self.cfg = cfg
+        self.split = split
+        self.body_cycles = cfg.n_cycles - split.head_cycles - split.tail_cycles
+        cyc = len(cfg.layer_pattern)
+        self.n_head_layers = cfg.n_dense_layers + split.head_cycles * cyc
+        self.n_tail_layers = split.tail_cycles * cyc
+        self.n_body_layers = self.body_cycles * cyc
+        self._has_shared = "shared_attn" in cfg.layer_pattern
+
+    # -------------------------------------------------------------- sizes
+    def segment_fractions(self):
+        """(alpha, tau) parameter fractions of |W| in head and body — feeds
+        the Table-1 cost model."""
+        total = self.cfg.param_count()
+        h = self._segment_params_count("head")
+        b = self._segment_params_count("body")
+        return h / total, b / total
+
+    def _segment_params_count(self, seg: str) -> int:
+        import numpy as _np
+        shapes = jax.eval_shape(lambda k: self.init(k)[seg],
+                                jax.random.PRNGKey(0))
+        return sum(int(_np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+
+    # -------------------------------------------------------------- init
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        keys = iter(jax.random.split(key, 32))
+        head: Params = {}
+        # embedding frontend
+        if cfg.arch_type == "vit":
+            patch_dim = 16 * 16 * 3
+            head["embed"] = {
+                "patch": L.dense_init(next(keys), patch_dim, cfg.d_model),
+                "cls": 0.02 * jax.random.normal(next(keys), (1, cfg.d_model)),
+                "pos": 0.02 * jax.random.normal(
+                    next(keys), (cfg.max_seq_len, cfg.d_model)),
+            }
+        else:
+            head["embed"] = {"tok": 0.02 * jax.random.normal(
+                next(keys), (cfg.vocab_size, cfg.d_model), jnp.float32)}
+        if cfg.encoder is not None:
+            head["encoder"] = {
+                "cycle": {"pos0": init_stack(next(keys), cfg, "attn",
+                                             cfg.encoder.n_layers)},
+                "final_norm": L.norm_init(cfg.d_model, cfg.norm)}
+        if cfg.n_dense_layers:
+            head["dense_stack"] = {"pos0": init_stack(
+                next(keys), cfg, "attn", cfg.n_dense_layers)}
+        head["stack"] = self._init_cycles(next(keys), self.split.head_cycles)
+
+        body: Params = {"stack": self._init_cycles(next(keys), self.body_cycles)}
+
+        tail: Params = {"stack": self._init_cycles(next(keys),
+                                                   self.split.tail_cycles)}
+        tail["final_norm"] = L.norm_init(cfg.d_model, cfg.norm)
+        out_dim = cfg.num_classes or cfg.vocab_size
+        tail["head"] = L.dense_init(next(keys), cfg.d_model, out_dim)
+        if cfg.mtp:
+            tail["mtp"] = {
+                "proj": L.dense_init(next(keys), 2 * cfg.d_model, cfg.d_model),
+                "block": init_block(next(keys), cfg, "attn"),
+                "norm": L.norm_init(cfg.d_model, cfg.norm),
+            }
+
+        if self._has_shared:
+            sh = init_block(next(keys), cfg, "shared_attn")
+            for seg in (head, body, tail):
+                seg["shared_attn"] = jax.tree.map(jnp.copy, sh)
+
+        prompt = 0.02 * jax.random.normal(
+            next(keys), (self.split.prompt_len, cfg.d_model), jnp.float32)
+        return {"head": head, "body": body, "tail": tail, "prompt": prompt}
+
+    def _init_cycles(self, key, n_cycles: int) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, len(cfg.layer_pattern))
+        out = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            if kind == "shared_attn":
+                out[f"pos{i}"] = {"_": jnp.zeros((n_cycles,))}
+            else:
+                out[f"pos{i}"] = init_stack(ks[i], cfg, kind, n_cycles)
+        return out
+
+    # -------------------------------------------------------------- caches
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.float32,
+                   window=None) -> Params:
+        cfg = self.cfg
+
+        def seg_cache(n_cycles):
+            return {f"pos{i}": stack_cache(cfg, kind, n_cycles, batch,
+                                           seq_len, dtype, window=window)
+                    for i, kind in enumerate(cfg.layer_pattern)}
+
+        cache: Params = {
+            "head": {"stack": seg_cache(self.split.head_cycles)},
+            "body": {"stack": seg_cache(self.body_cycles)},
+            "tail": {"stack": seg_cache(self.split.tail_cycles)},
+        }
+        if cfg.n_dense_layers:
+            cache["head"]["dense_stack"] = {"pos0": stack_cache(
+                cfg, "attn", cfg.n_dense_layers, batch, seq_len, dtype,
+                window=window)}
+        if cfg.encoder is not None:
+            cache["head"]["encoder_out"] = jnp.zeros(
+                (batch, cfg.encoder.n_frames, cfg.d_model), dtype)
+        return cache
+
+    # -------------------------------------------------------------- embed
+    def _embed(self, head_p, batch, mode, prompt, dtype):
+        cfg = self.cfg
+        emb = head_p["embed"]
+        if cfg.arch_type == "vit":
+            patches = batch["patches"]
+            B = patches.shape[0]
+            x = L.dense(emb["patch"], patches.astype(dtype))
+            cls = jnp.broadcast_to(emb["cls"][None], (B, 1, cfg.d_model))
+            x = jnp.concatenate([cls.astype(x.dtype), x], 1)
+            if prompt is not None:
+                pr = jnp.broadcast_to(prompt[None], (B,) + prompt.shape)
+                x = jnp.concatenate([x[:, :1], pr.astype(x.dtype), x[:, 1:]], 1)
+            x = x + emb["pos"][: x.shape[1]].astype(x.dtype)
+            pos = jnp.broadcast_to(
+                jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+            return x, pos, pos, 0
+
+        toks = batch["tokens"]
+        B, S = toks.shape
+        x = jnp.take(emb["tok"].astype(dtype), toks, axis=0)
+        n_prefix = 0
+        if cfg.arch_type == "audio":
+            if mode == "decode":
+                apos = batch["pos"][:, None]
+            else:
+                apos = jnp.broadcast_to(
+                    jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            x = x + L.sinusoidal_embedding(apos, cfg.d_model).astype(dtype)
+        if cfg.arch_type == "vlm" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(dtype)
+            x = jnp.concatenate([pe, x], axis=1)
+            n_prefix += pe.shape[1]
+        if prompt is not None and mode != "decode":
+            pr = jnp.broadcast_to(prompt[None], (B,) + prompt.shape)
+            x = jnp.concatenate([pr.astype(dtype), x], axis=1)
+            n_prefix += prompt.shape[0]
+
+        T = x.shape[1]
+        if mode == "decode":
+            base = batch["pos"][:, None]
+        else:
+            base = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        base = base.astype(jnp.int32)
+        att = cfg.attention
+        if att is not None and att.mrope_sections is not None:
+            # M-RoPE: layout is [prompt | patches | text]; patch grid
+            # positions come from the frontend stub, offset past the prompts;
+            # masking & cache slots always use the sequence index `base`.
+            if mode != "decode" and "mrope_positions" in batch:
+                # stored client-axis-first as (B, 3, Np); model wants (3, B, Np)
+                grid = jnp.moveaxis(
+                    batch["mrope_positions"], 1, 0).astype(jnp.int32)
+                npz = grid.shape[-1]
+                npr = n_prefix - npz
+                b3 = jnp.broadcast_to(base[None], (3, B, T))
+                pos = jnp.concatenate(
+                    [b3[:, :, :npr], grid + npr, b3[:, :, npr + npz:]], -1)
+            else:
+                pos = jnp.broadcast_to(base[None], (3,) + base.shape)
+            return x, pos, base, n_prefix
+        return x, base, base, n_prefix
+
+    # -------------------------------------------------------------- segments
+    def _seg_fwd(self, seg_p, seg_name, n_cycles, x, ctx, cache):
+        cfg = self.cfg
+        caches = cache["stack"] if cache is not None else None
+        x, aux, new_stack = run_stack(
+            cfg, seg_p["stack"], cfg.layer_pattern, x, ctx, caches,
+            shared=seg_p.get("shared_attn"))
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache["stack"] = new_stack
+        return x, aux, new_cache
+
+    def head_fwd(self, head_p, prompt, batch, *, mode="train", cache=None,
+                 impl="ref", dtype=jnp.float32, remat=False,
+                 unroll=False) -> Dict[str, Any]:
+        """Client-side: embed (+prompts, + whisper encoder) -> head layers.
+        Output `smashed` is the cut-layer activation sent to the server."""
+        cfg = self.cfg
+        encoder_out = None
+        new_cache = dict(cache) if cache is not None else None
+        if cfg.encoder is not None:
+            if mode == "decode":
+                encoder_out = cache["encoder_out"]
+            else:
+                frames = batch["frames"].astype(dtype)
+                Bf, F, _ = frames.shape
+                fpos = jnp.broadcast_to(
+                    jnp.arange(F, dtype=jnp.int32)[None], (Bf, F))
+                h = frames + L.sinusoidal_embedding(fpos, cfg.d_model).astype(dtype)
+                ectx = L.Ctx(mode="train", positions=fpos, impl=impl,
+                             causal=False, remat=remat, unroll=unroll)
+                h, _, _ = run_stack(cfg, head_p["encoder"]["cycle"], ("attn",),
+                                    h, ectx, None)
+                encoder_out = L.apply_norm(
+                    head_p["encoder"]["final_norm"], h, cfg.norm)
+                if new_cache is not None:
+                    new_cache["encoder_out"] = encoder_out
+
+        x, positions, seq_pos, n_prefix = self._embed(
+            head_p, batch, mode, prompt, dtype)
+        ctx = L.Ctx(mode=mode, positions=positions, seq_pos=seq_pos,
+                    impl=impl, remat=remat, unroll=unroll,
+                    causal=(cfg.arch_type != "vit"), encoder_out=encoder_out)
+        aux = jnp.float32(0.0)
+        if cfg.n_dense_layers:
+            c = cache.get("dense_stack") if cache is not None else None
+            x, a, nc = run_stack(cfg, head_p["dense_stack"], ("attn",), x,
+                                 ctx, c)
+            aux += a
+            if new_cache is not None:
+                new_cache["dense_stack"] = nc
+        seg_cache = {"stack": cache["stack"]} if cache is not None else None
+        x, a, nc = self._seg_fwd(head_p, "head", self.split.head_cycles, x,
+                                 ctx, seg_cache)
+        aux += a
+        if new_cache is not None:
+            new_cache["stack"] = nc["stack"]
+        return {"smashed": x, "positions": positions, "seq_pos": seq_pos,
+                "n_prefix": n_prefix, "encoder_out": encoder_out, "aux": aux,
+                "cache": new_cache, "mode": mode, "impl": impl,
+                "remat": remat, "unroll": unroll}
+
+    def _ctx_from(self, head_out) -> L.Ctx:
+        return L.Ctx(mode=head_out["mode"], positions=head_out["positions"],
+                     seq_pos=head_out["seq_pos"], impl=head_out["impl"],
+                     remat=head_out.get("remat", False),
+                     unroll=head_out.get("unroll", False),
+                     causal=(self.cfg.arch_type != "vit"),
+                     encoder_out=head_out["encoder_out"])
+
+    def body_fwd(self, body_p, smashed, head_out, *, cache=None):
+        """Server-side: frozen body over the smashed activations."""
+        ctx = self._ctx_from(head_out)
+        x, aux, new_cache = self._seg_fwd(
+            body_p, "body", self.body_cycles, smashed, ctx, cache)
+        return {"smashed": x, "aux": aux, "cache": new_cache}
+
+    def tail_fwd(self, tail_p, x, head_out, batch=None, *, cache=None,
+                 last_only: bool = False):
+        """Client-side: tail layers -> final norm -> task head.
+        last_only=True computes logits for the final position only — the
+        production prefill semantics (avoids materializing/reducing the
+        (B, S, V) logits tensor; see EXPERIMENTS.md §Perf pair A)."""
+        cfg = self.cfg
+        ctx = self._ctx_from(head_out)
+        x, aux, new_cache = self._seg_fwd(
+            tail_p, "tail", self.split.tail_cycles, x, ctx, cache)
+        hidden = L.apply_norm(tail_p["final_norm"], x, cfg.norm)
+        out: Dict[str, Any] = {"aux": aux, "cache": new_cache, "hidden": hidden}
+        if cfg.arch_type == "vit":
+            out["logits"] = L.dense(tail_p["head"], hidden[:, 0])
+            return out
+        if last_only:
+            hidden = hidden[:, -1:, :]
+        logits = hidden @ tail_p["head"]["w"].astype(hidden.dtype)
+        if cfg.final_logit_softcap:
+            c = cfg.final_logit_softcap
+            logits = c * jnp.tanh(logits / c)
+        out["logits"] = logits
+        out["n_prefix"] = head_out["n_prefix"]
+        if cfg.mtp and head_out["mode"] == "train" and batch is not None:
+            toks = batch["tokens"]
+            # embedding lives in the head segment; MTP needs it — the client
+            # holds both, so this is local (no extra communication).
+            out["mtp_hidden_ready"] = True
+        return out
+
+    # -------------------------------------------------------------- routes
+    def forward(self, params, batch, *, route="split", mode="train",
+                cache=None, impl="ref", dtype=jnp.float32, remat=False,
+                unroll=False, prompt=None, last_only=True):
+        """route='split': head -> body -> tail (phases 2).
+        route='local': head -> tail directly (phase 1 local-loss update and
+        EL2N scoring — the body is skipped, zero server communication)."""
+        prompt = params["prompt"] if prompt is None else prompt
+        hc = cache["head"] if cache is not None else None
+        ho = self.head_fwd(params["head"], prompt, batch, mode=mode,
+                           cache=hc, impl=impl, dtype=dtype, remat=remat,
+                           unroll=unroll)
+        x, aux = ho["smashed"], ho["aux"]
+        new_cache = {"head": ho["cache"]} if cache is not None else None
+        if route == "split":
+            bo = self.body_fwd(params["body"], x, ho,
+                               cache=cache["body"] if cache else None)
+            x = bo["smashed"]
+            aux += bo["aux"]
+            if cache is not None:
+                new_cache["body"] = bo["cache"]
+        to = self.tail_fwd(params["tail"], x, ho, batch,
+                           cache=cache["tail"] if cache else None,
+                           last_only=(mode == "prefill" and last_only))
+        out = dict(to)
+        out["aux"] = aux + to["aux"]
+        if cache is not None:
+            new_cache["tail"] = to["cache"]
+            out["cache"] = new_cache
+        return out

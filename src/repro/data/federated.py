@@ -1,0 +1,68 @@
+"""Federated data pipeline: IID / Dirichlet non-IID partitioning (the
+paper's Sec. 4.1 setting: 50 clients, Dirichlet alpha=0.1 for non-IID),
+client selection, and stacking selected clients into the (K, n, ...) layout
+the protocol vmaps/shards over.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+def iid_partition(data: Dict[str, np.ndarray], n_clients: int, *,
+                  seed: int = 0) -> List[Dict[str, np.ndarray]]:
+    n = len(next(iter(data.values())))
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    per = n // n_clients
+    return [
+        {k: v[perm[i * per:(i + 1) * per]] for k, v in data.items()}
+        for i in range(n_clients)
+    ]
+
+
+def dirichlet_partition(data: Dict[str, np.ndarray], n_clients: int, *,
+                        alpha: float = 0.1, seed: int = 0,
+                        label_key: str = "labels") -> List[Dict[str, np.ndarray]]:
+    """Label-skewed non-IID split [Hsu et al. 2019]. Every client is padded
+    (by resampling its own data) to the same size so the client axis stacks."""
+    labels = data[label_key]
+    n = len(labels)
+    classes = np.unique(labels)
+    rng = np.random.default_rng(seed)
+    per = n // n_clients
+
+    client_idx: List[List[int]] = [[] for _ in range(n_clients)]
+    for c in classes:
+        idx_c = np.where(labels == c)[0]
+        rng.shuffle(idx_c)
+        props = rng.dirichlet([alpha] * n_clients)
+        cuts = (np.cumsum(props) * len(idx_c)).astype(int)[:-1]
+        for cid, part in enumerate(np.split(idx_c, cuts)):
+            client_idx[cid].extend(part.tolist())
+
+    out = []
+    for cid in range(n_clients):
+        idx = np.asarray(client_idx[cid], dtype=np.int64)
+        if len(idx) == 0:
+            idx = rng.integers(0, n, size=per)
+        elif len(idx) < per:
+            idx = np.concatenate([idx, rng.choice(idx, per - len(idx))])
+        else:
+            idx = idx[:per]
+        rng.shuffle(idx)
+        out.append({k: v[idx] for k, v in data.items()})
+    return out
+
+
+def select_clients(n_clients: int, k: int, *, seed: int, round_idx: int):
+    rng = np.random.default_rng(seed * 100_003 + round_idx)
+    return rng.choice(n_clients, size=k, replace=False)
+
+
+def stack_clients(clients: Sequence[Dict[str, np.ndarray]],
+                  idx: Sequence[int]) -> Dict[str, np.ndarray]:
+    """-> pytree with leading (K, n_local, ...) axes."""
+    keys = clients[0].keys()
+    return {k: np.stack([clients[i][k] for i in idx]) for k in keys}

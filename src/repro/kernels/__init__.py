@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots of the SFPrompt system.
+
+Each kernel lives in its own subpackage:
+  <name>/kernel.py  — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  <name>/ops.py     — jit'd public wrapper with impl dispatch (ref|pallas|interpret)
+  <name>/ref.py     — pure-jnp oracle
+
+Kernels:
+  flash_attention — blockwise attention: GQA, causal, sliding window, logit softcap
+  el2n            — fused EL2N score + CE over vocab tiles (paper's pruning hot-spot)
+  rwkv6_scan      — RWKV-6 data-dependent-decay recurrence, chunked (GLA form)
+  mamba2_scan     — Mamba-2 SSD chunked scan (matmul form for the MXU)
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.el2n.ops import el2n_scores  # noqa: F401

@@ -1,0 +1,37 @@
+"""Public fused EL2N/CE op with impl dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.el2n import ref
+from repro.kernels.el2n.kernel import el2n_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_n", "block_v"))
+def el2n_scores(logits: jnp.ndarray, labels: jnp.ndarray, *,
+                impl: str = "auto", block_n: int = 256, block_v: int = 2048):
+    """EL2N score + cross-entropy per row.
+
+    logits: (N, V) float; labels: (N,) int32.
+    Returns (el2n (N,), ce (N,)) in float32.
+    """
+    if impl in ("auto", "analysis"):
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return ref.el2n_scores(logits, labels)
+
+    N, V = logits.shape
+    bn = min(block_n, N) if N % min(block_n, N) == 0 else 1
+    # pick the largest block_n <= block_n dividing N
+    bn = next(b for b in (block_n, 128, 64, 32, 16, 8, 4, 2, 1) if N % b == 0)
+    bv = min(block_v, max(128, 1 << (V - 1).bit_length()))
+    padv = (-V) % bv
+    if padv:
+        logits = jnp.pad(logits, ((0, 0), (0, padv)))
+    el2n, ce = el2n_fwd(
+        logits, labels[:, None].astype(jnp.int32), vocab=V,
+        block_n=bn, block_v=bv, interpret=(impl == "interpret"))
+    return el2n[:, 0], ce[:, 0]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for fused EL2N scoring (+ cross-entropy).
+
+EL2N [Paul et al. 2021, as used by SFPrompt Eq. (2)]:
+    score(x, y) = || softmax(f(x)) - onehot(y) ||_2
+
+Identity used by the fused kernel (never materializes the probability
+vector): with m = max logit, Z = sum exp(l - m), S2 = sum exp(2(l - m)),
+l_y the label logit,
+    ||p - y||^2 = sum_i p_i^2 - 2 p_y + 1
+               = S2 / Z^2 - 2 exp(l_y - m) / Z + 1
+    CE = m + log Z - l_y
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def el2n_scores(logits: jnp.ndarray, labels: jnp.ndarray):
+    """logits (N, V) float, labels (N,) int32 -> (el2n (N,), ce (N,))."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    z = jnp.sum(p, axis=-1, keepdims=True)
+    probs = p / z
+    onehot = jnp.arange(logits.shape[-1])[None, :] == labels[:, None]
+    err = probs - onehot.astype(jnp.float32)
+    el2n = jnp.sqrt(jnp.sum(err * err, axis=-1))
+    ly = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    ce = (m[:, 0] + jnp.log(z[:, 0])) - ly
+    return el2n, ce

@@ -1,0 +1,91 @@
+"""Public attention op with impl dispatch.
+
+impl:
+  'ref'       — pure-jnp oracle (default on CPU; what dry-runs lower)
+  'pallas'    — Pallas TPU kernel
+  'interpret' — Pallas kernel executed by the interpreter on CPU (tests)
+  'auto'      — 'pallas' on TPU, 'ref' elsewhere
+
+The kernel path covers train/prefill attention (contiguous positions from 0).
+Decode (q_offset / explicit kv_positions — including ring-buffer caches) uses
+the ref path: a 1-token query is bandwidth-trivial and gains nothing from
+blocking.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sliding_window", "softcap", "scale", "impl",
+                     "block_q", "block_kv"))
+def flash_attention(
+    q: jnp.ndarray,              # (B, Sq, Hq, Dh)
+    k: jnp.ndarray,              # (B, Skv, Hkv, Dh)
+    v: jnp.ndarray,              # (B, Skv, Hkv, Dv)
+    *,
+    q_offset: Optional[jnp.ndarray] = None,
+    kv_positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    impl: str = "auto",
+    block_q: int = 128,
+    block_kv: int = 128,
+) -> jnp.ndarray:
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "analysis":
+        impl = "blocked"
+    needs_ref = q_offset is not None or kv_positions is not None
+    if impl == "blocked" and not needs_ref:
+        return ref.blocked_attention(
+            q, k, v, causal=causal, sliding_window=sliding_window,
+            softcap=softcap, scale=scale)
+    if impl in ("ref", "blocked") or needs_ref:
+        return ref.attention(
+            q, k, v, causal=causal, q_offset=q_offset,
+            kv_positions=kv_positions, sliding_window=sliding_window,
+            softcap=softcap, scale=scale)
+
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    if scale is None:
+        scale = Dh ** -0.5
+    bq = min(block_q, max(16, 1 << (Sq - 1).bit_length()))
+    bkv = min(block_kv, max(16, 1 << (Skv - 1).bit_length()))
+
+    qt = _pad_to(q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, Dh), 1, bq)
+    kt = _pad_to(k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, Dh), 1, bkv)
+    vt = _pad_to(v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, Dv), 1, bkv)
+
+    out = flash_attention_fwd(
+        qt, kt, vt, n_q_heads=Hq, n_kv_heads=Hkv, causal=causal,
+        sliding_window=sliding_window, softcap=softcap, scale=scale,
+        kv_len=Skv, block_q=bq, block_kv=bkv,
+        interpret=(impl == "interpret"))
+    out = out[:, :Sq].reshape(B, Hq, Sq, Dv).transpose(0, 2, 1, 3)
+    return out

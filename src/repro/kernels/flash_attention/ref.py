@@ -1,0 +1,116 @@
+"""Pure-jnp oracle for flash attention.
+
+Supports GQA (n_q_heads a multiple of n_kv_heads), causal masking with a
+query position offset (prefill continuation / decode), sliding windows, logit
+softcapping (gemma-2), and explicit kv position/validity arrays (ring-buffer
+decode caches pass non-contiguous kv slot positions).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30  # finite large-negative: avoids NaNs for fully-masked rows
+
+
+def attention(
+    q: jnp.ndarray,              # (B, Sq, Hq, Dh)
+    k: jnp.ndarray,              # (B, Skv, Hkv, Dh)
+    v: jnp.ndarray,              # (B, Skv, Hkv, Dv)
+    *,
+    causal: bool = True,
+    q_offset: Optional[jnp.ndarray] = None,   # (B,) absolute position of q[:,0]
+    kv_positions: Optional[jnp.ndarray] = None,  # (B, Skv) absolute pos, -1 = empty
+    sliding_window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    if scale is None:
+        scale = Dh ** -0.5
+
+    if q_offset is None:
+        q_offset = jnp.zeros((B,), jnp.int32)
+    q_pos = q_offset[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None, :]  # (B,Sq)
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(
+            jnp.arange(Skv, dtype=jnp.int32)[None, :], (B, Skv))
+
+    # (B, Sq, Skv) mask
+    valid = kv_positions[:, None, :] >= 0
+    if causal:
+        valid &= kv_positions[:, None, :] <= q_pos[:, :, None]
+    if sliding_window is not None:
+        valid &= kv_positions[:, None, :] > q_pos[:, :, None] - sliding_window
+
+    kg = jnp.repeat(k, group, axis=2)  # (B, Skv, Hq, Dh)
+    vg = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kg.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(valid[:, None, :, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vg.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def blocked_attention(
+    q: jnp.ndarray,              # (B, Sq, Hq, Dh)
+    k: jnp.ndarray,              # (B, Skv, Hkv, Dh)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_kv: int = 2048,
+) -> jnp.ndarray:
+    """XLA-native flash attention: an UNROLLED python loop over kv blocks
+    with online-softmax accumulation — O(Sq * block) live memory, no lax
+    control flow (so dry-run cost_analysis counts it correctly), same math
+    as the Pallas kernel. Used for dry-run analysis compiles and as the
+    production CPU path for long sequences."""
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = Dh ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    q_pos = jnp.arange(Sq, dtype=jnp.int32)
+
+    acc = jnp.zeros((B, Sq, Hq, v.shape[-1]), jnp.float32)
+    m = jnp.full((B, Sq, Hq, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, Sq, Hq, 1), jnp.float32)
+
+    for start in range(0, Skv, block_kv):
+        end = min(start + block_kv, Skv)
+        if causal and start > Sq - 1:
+            break  # fully above the diagonal
+        kb = jnp.repeat(k[:, start:end].astype(jnp.float32), group, axis=2)
+        vb = jnp.repeat(v[:, start:end].astype(jnp.float32), group, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bqhk", qf, kb)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        cols = jnp.arange(start, end, dtype=jnp.int32)
+        mask = jnp.ones((Sq, end - start), bool)
+        if causal:
+            mask &= cols[None, :] <= q_pos[:, None]
+        if sliding_window is not None:
+            mask &= cols[None, :] > q_pos[:, None] - sliding_window
+        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, -1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l = alpha * l + jnp.sum(p, -1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bqhk,bkhd->bqhd", p, vb)
+        m = m_new
+
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)

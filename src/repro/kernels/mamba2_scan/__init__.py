@@ -1,0 +1,1 @@
+from repro.kernels.mamba2_scan.ops import mamba2_scan  # noqa: F401

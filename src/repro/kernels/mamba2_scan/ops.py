@@ -1,0 +1,53 @@
+"""Public Mamba-2 SSD scan op with impl dispatch."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba2_scan import ref
+from repro.kernels.mamba2_scan.kernel import mamba2_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk"))
+def mamba2_scan(
+    x: jnp.ndarray,     # (B, T, H, P)
+    dt: jnp.ndarray,    # (B, T, H)
+    A: jnp.ndarray,     # (H,)
+    Bm: jnp.ndarray,    # (B, T, G, N)
+    Cm: jnp.ndarray,    # (B, T, G, N)
+    state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+    *,
+    impl: str = "auto",
+    chunk: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl in ("chunked", "analysis"):
+        return ref.mamba2_chunked(x, dt, A, Bm, Cm, state,
+                                  chunk=min(chunk, x.shape[1]))
+    if impl == "ref":
+        return ref.mamba2_scan(x, dt, A, Bm, Cm, state)
+
+    B, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    if state is None:
+        state = jnp.zeros((B, H, P, N), jnp.float32)
+    c = min(chunk, T)
+    pad = (-T) % c
+    xs = jnp.moveaxis(x, 2, 1).reshape(B * H, T, P)
+    dts = jnp.moveaxis(dt, 2, 1).reshape(B * H, T, 1)
+    Bs = jnp.moveaxis(Bm, 2, 1).reshape(B * G, T, N)
+    Cs = jnp.moveaxis(Cm, 2, 1).reshape(B * G, T, N)
+    if pad:
+        w3 = ((0, 0), (0, pad), (0, 0))
+        xs, Bs, Cs, dts = (jnp.pad(t, w3) for t in (xs, Bs, Cs, dts))
+        # padded dt rows are zero: decay exp(0)=1 keeps state, dtx=0 adds nothing
+    As = jnp.broadcast_to(A[None], (B, H)).reshape(B * H, 1)
+    y, hout = mamba2_fwd(
+        xs, dts, As, Bs, Cs, state.reshape(B * H, P, N),
+        n_heads=H, n_groups=G, chunk=c, interpret=(impl == "interpret"))
+    y = y[:, :T].reshape(B, H, T, P).swapaxes(1, 2)
+    return y.astype(x.dtype), hout.reshape(B, H, P, N)

@@ -1,0 +1,99 @@
+"""Pure-jnp oracle for the Mamba-2 SSD recurrence [arXiv:2405.21060-style,
+as used by zamba2, arXiv:2411.15242].
+
+Per head h with scalar log-decay rate A_h < 0, state h in R^{P x N}:
+
+    a_t  = exp(dt_t * A)
+    h_t  = a_t * h_{t-1} + (dt_t * x_t) B_t^T     (outer product, (P,N))
+    y_t  = h_t C_t                                 ((P,N) @ (N,) -> (P,))
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba2_scan(
+    x: jnp.ndarray,     # (B, T, H, P)
+    dt: jnp.ndarray,    # (B, T, H) positive
+    A: jnp.ndarray,     # (H,) negative log-decay rate
+    Bm: jnp.ndarray,    # (B, T, G, N) input matrix (G groups, H % G == 0)
+    Cm: jnp.ndarray,    # (B, T, G, N) output matrix
+    state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+    x_, dt_, Bm_, Cm_ = (t.astype(f32) for t in (x, dt, Bm, Cm))
+    Bh = jnp.repeat(Bm_, rep, axis=2)   # (B, T, H, N)
+    Ch = jnp.repeat(Cm_, rep, axis=2)
+    if state is None:
+        state = jnp.zeros((B, H, P, N), f32)
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs
+        a = jnp.exp(dtt * A.astype(f32))[..., None, None]     # (B,H,1,1)
+        h = a * h + (dtt[..., None] * xt)[..., None] * bt[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (x_, dt_, Bh, Ch))
+    final, ys = jax.lax.scan(step, state.astype(f32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+def mamba2_chunked(
+    x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, Bm: jnp.ndarray,
+    Cm: jnp.ndarray, state: Optional[jnp.ndarray] = None, *,
+    chunk: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD chunked-matmul form with an UNROLLED python chunk loop (no lax
+    control flow -> exact dry-run cost accounting). Same segsum math as the
+    Pallas kernel; exact and f32-stable (scalar per-head decays, every
+    exponent <= 0)."""
+    B, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+    if state is None:
+        state = jnp.zeros((B, H, P, N), f32)
+    h = state.astype(f32)
+    Af = A.astype(f32)
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    Bh = jnp.repeat(Bm.astype(f32), rep, axis=2)
+    Ch = jnp.repeat(Cm.astype(f32), rep, axis=2)
+    ys = []
+    tri = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    for s0 in range(0, Tp, chunk):
+        xc = x[:, s0:s0 + chunk].astype(f32)      # (B, c, H, P)
+        dtc = dt[:, s0:s0 + chunk].astype(f32)    # (B, c, H)
+        bc = Bh[:, s0:s0 + chunk]                 # (B, c, H, N)
+        cc = Ch[:, s0:s0 + chunk]
+        la = dtc * Af                             # (B, c, H) log decay <= 0
+        acum = jnp.cumsum(la, axis=1)
+        diff = acum[:, :, None] - acum[:, None, :]       # (B, t, s, H)
+        L = jnp.where(tri[None, :, :, None],
+                      jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+        L = jnp.moveaxis(L, 3, 1)                 # (B, H, t, s)
+        dtx = dtc[..., None] * xc
+        cb = jnp.einsum("bthn,bshn->bhts", cc, bc)
+        y = jnp.einsum("bhts,bshp->bthp", L * cb, dtx)
+        # inter-chunk
+        y = y + jnp.exp(acum)[..., None] * jnp.einsum(
+            "bthn,bhpn->bthp", cc, h)
+        ys.append(y)
+        total = acum[:, -1]                        # (B, H)
+        wgt = jnp.exp(total[:, None] - acum)       # (B, c, H)
+        h = jnp.exp(total)[..., None, None] * h + jnp.einsum(
+            "bshp,bshn->bhpn", dtx * wgt[..., None], bc)
+    y = jnp.concatenate(ys, axis=1)[:, :T]
+    return y.astype(x.dtype), h

@@ -1,0 +1,50 @@
+"""Public RWKV-6 scan op with impl dispatch."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan import ref
+from repro.kernels.rwkv6_scan.kernel import rwkv6_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk"))
+def rwkv6_scan(
+    r: jnp.ndarray,      # (B, T, H, K)
+    k: jnp.ndarray,
+    v: jnp.ndarray,      # (B, T, H, V)
+    w: jnp.ndarray,      # (B, T, H, K) log-decay (negative)
+    u: jnp.ndarray,      # (H, K)
+    state: Optional[jnp.ndarray] = None,  # (B, H, K, V)
+    *,
+    impl: str = "auto",
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl in ("chunked", "analysis"):
+        return ref.rwkv6_chunked(r, k, v, w, u, state, chunk=min(chunk, r.shape[1]))
+    if impl == "ref":
+        return ref.rwkv6_scan(r, k, v, w, u, state)
+
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, H, K, V), jnp.float32)
+    c = min(chunk, T)
+    pad = (-T) % c
+    tohead = lambda x: jnp.moveaxis(x, 2, 1).reshape(B * H, T, x.shape[-1])
+    rs, ks, vs, ws = map(tohead, (r, k, v, w))
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0))
+        rs, ks, vs = (jnp.pad(x, widths) for x in (rs, ks, vs))
+        ws = jnp.pad(ws, widths)  # zero log-decay in padding: state unchanged
+        # padded k rows are zero => no state pollution
+    us = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, K)
+    y, sout = rwkv6_fwd(rs, ks, vs, ws, us, state.reshape(B * H, K, V),
+                        chunk=c, interpret=(impl == "interpret"))
+    y = y[:, :T].reshape(B, H, T, V).swapaxes(1, 2)
+    return y.astype(r.dtype), sout.reshape(B, H, K, V)

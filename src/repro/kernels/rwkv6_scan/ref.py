@@ -1,0 +1,93 @@
+"""Pure-jnp oracle for the RWKV-6 (Finch) time-mix recurrence.
+
+Per head with state S in R^{K x V}, data-dependent log-decay w_t < 0
+[arXiv:2404.05892]:
+
+    y_t = r_t^T S_{t-1} + (r_t . (u o k_t)) v_t
+    S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan(
+    r: jnp.ndarray,      # (B, T, H, K) receptance
+    k: jnp.ndarray,      # (B, T, H, K)
+    v: jnp.ndarray,      # (B, T, H, V)
+    w: jnp.ndarray,      # (B, T, H, K) log-decay (negative)
+    u: jnp.ndarray,      # (H, K) per-head bonus
+    state: Optional[jnp.ndarray] = None,  # (B, H, K, V)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    f32 = jnp.float32
+    r_, k_, v_, w_ = (x.astype(f32) for x in (r, k, v, w))
+    if state is None:
+        state = jnp.zeros((B, H, K, V), f32)
+
+    def step(S, inputs):
+        rt, kt, vt, wt = inputs                       # (B,H,K) / (B,H,V)
+        bonus = jnp.einsum("bhk,hk,bhk->bh", rt, u.astype(f32), kt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S) + bonus[..., None] * vt
+        S = jnp.exp(wt)[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r_, k_, v_, w_))
+    final, ys = jax.lax.scan(step, state.astype(f32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), final
+
+
+def rwkv6_chunked(
+    r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+    u: jnp.ndarray, state: Optional[jnp.ndarray] = None, *,
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked GLA-form RWKV-6: an UNROLLED python loop over time chunks
+    (no lax control flow -> exact dry-run cost accounting). Intra-chunk
+    interactions use the stable pairwise-difference tensor
+    exp(cw_{t-1} - cw_s) (every retained exponent <= 0), inter-chunk uses
+    the carried state. Exact same math as the sequential recurrence."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    f32 = jnp.float32
+    if state is None:
+        state = jnp.zeros((B, H, K, V), f32)
+    S = state.astype(f32)
+    uf = u.astype(f32)
+    pad = (-T) % chunk
+    if pad:
+        zlast = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, w = zlast(r), zlast(k), zlast(v), zlast(w)
+    Tp = T + pad
+    ys = []
+    for s0 in range(0, Tp, chunk):
+        rc = r[:, s0:s0 + chunk].astype(f32)     # (B, c, H, K)
+        kc = k[:, s0:s0 + chunk].astype(f32)
+        vc = v[:, s0:s0 + chunk].astype(f32)
+        wc = w[:, s0:s0 + chunk].astype(f32)     # log-decay <= 0
+        cw = jnp.cumsum(wc, axis=1)              # inclusive
+        cwe = cw - wc                            # exclusive (W_{t-1})
+        # intra-chunk: A[t,s] = sum_k r_t[k] k_s[k] exp(cwe_t - cw_s)[k], s<t
+        diff = cwe[:, :, None] - cw[:, None, :]  # (B, t, s, H, K)
+        tri = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+        diff = jnp.where(tri[None, :, :, None, None], diff, 0.0)
+        A = jnp.einsum("bthk,bshk,btshk->bhts", rc, kc,
+                       jnp.exp(jnp.minimum(diff, 0.0)))
+        A = jnp.where(tri[None, None], A, 0.0)
+        # diagonal bonus
+        diag = jnp.einsum("bthk,hk,bthk->bth", rc, uf, kc)
+        y = jnp.einsum("bhts,bshv->bthv", A, vc) + diag[..., None] * vc
+        # inter-chunk: y_t += (r_t o exp(cwe_t))^T S
+        y = y + jnp.einsum("bthk,bhkv->bthv", rc * jnp.exp(cwe), S)
+        ys.append(y)
+        # state update: S = diag(exp(cw_T)) S + sum_s (exp(cw_T - cw_s) o k_s) v_s
+        total = cw[:, -1]                        # (B, H, K)
+        wgt = jnp.exp(total[:, None] - cw)       # (B, c, H, K), <= 1
+        S = jnp.exp(total)[..., None] * S + jnp.einsum(
+            "bshk,bshv->bhkv", kc * wgt, vc)
+    y = jnp.concatenate(ys, axis=1)[:, :T]
+    return y.astype(r.dtype), S

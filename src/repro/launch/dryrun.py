@@ -1,0 +1,330 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede every other import (jax locks device count on first init).
+
+_DOC = """Multi-pod dry-run: prove the distribution config lowers + compiles for
+every (architecture x input shape x mesh) combination, and extract the
+roofline terms from the compiled artifact.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  python -m repro.launch.dryrun --sweep                 # all 10 x 4, 1 pod
+  python -m repro.launch.dryrun --sweep --multi-pod     # 512-chip mesh
+  python -m repro.launch.dryrun --sweep --loss-mode fused ...  # perf variants
+
+Per combination this lowers the SFPrompt step (phase-2 split training step +
+phase-3 aggregation for train_4k; split-inference prefill/decode for the
+serving shapes), compiles it for the production mesh, prints
+memory_analysis()/cost_analysis(), parses collective bytes out of the HLO,
+and writes benchmarks/results/dryrun/<arch>__<shape>__<mesh>[__tag].json.
+"""
+__doc__ = _DOC
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, get_config
+from repro.core.split import SplitConfig, SplitModel
+from repro.launch import hlo as hlo_util
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               data_parallel_size, make_production_mesh)
+from repro.launch.specs import (SHAPES, ShapeSpec, batch_specs, cache_specs,
+                                param_specs, stack_client_axis)
+from repro.sharding.rules import batch_pspec, cache_pspecs, params_pspecs
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+# microbatch count for phase-2 gradient accumulation, by rough model scale
+MICROBATCHES = {
+    "nemotron-4-340b": 8, "deepseek-v3-671b": 16, "qwen2-vl-72b": 4,
+    "phi3.5-moe-42b-a6.6b": 4, "zamba2-2.7b": 4,
+}
+DEFAULT_SPLIT = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=16,
+                            prune_gamma=0.5, local_epochs=10)
+
+
+def default_split_for(cfg) -> SplitConfig:
+    return DEFAULT_SPLIT
+
+
+def _sharding_tree(mesh, pspec_tree):
+    return jax.tree.map(
+        lambda p: jax.sharding.NamedSharding(mesh, p), pspec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def _model_flops(cfg, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode: D=new
+    tokens only. Forward-only shapes use 2*N*D."""
+    n_params = cfg.param_count()
+    if cfg.moe is not None:
+        e = cfg.moe
+        dense_like = cfg.param_count() - cfg.n_cycles * (
+            (e.n_experts - e.top_k) * 3 * cfg.d_model * e.d_ff_expert)
+        n_params = dense_like
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq
+        return 6.0 * n_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq
+        return 2.0 * n_params * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_params * tokens
+
+
+FSDP_THRESHOLD_GB = 4.0  # per-device frozen bytes above which the body is
+#                           additionally data-sharded (ZeRO-style). Below it
+#                           model-only sharding avoids the per-layer
+#                           partial-sum activation all-reduces (§Perf pair C).
+
+
+def _needs_fsdp(model: SplitModel, mesh) -> bool:
+    import numpy as _np
+    shapes = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    frozen_bytes = sum(
+        int(_np.prod(s.shape)) * 2  # bf16
+        for seg in ("head", "body") for s in jax.tree.leaves(shapes[seg]))
+    per_device = frozen_bytes / mesh.shape["model"]
+    return per_device > FSDP_THRESHOLD_GB * 2**30
+
+
+def _build_lowered(model: SplitModel, shape: ShapeSpec, mesh, *,
+                   loss_mode: str, microbatches: int, remat: bool,
+                   unroll: bool, impl: str, fsdp=None):
+    cfg = model.cfg
+    if fsdp is None:
+        fsdp = _needs_fsdp(model, mesh)
+    if shape.kind == "train":
+        K = data_parallel_size(mesh)
+        b = shape.global_batch // K
+        mb = min(microbatches, b)
+        train_step, opt = steps_lib.make_train_step(
+            model, n_clients=K, microbatches=mb, loss_mode=loss_mode,
+            remat=remat, unroll=unroll, impl=impl)
+        pspecs = param_specs(model)
+        frozen = {"head": pspecs["head"], "body": pspecs["body"]}
+        trainable = stack_client_axis(
+            {"tail": pspecs["tail"], "prompt": pspecs["prompt"]}, K)
+        opt_state = jax.eval_shape(lambda t: jax.vmap(opt.init)(t), trainable)
+        batch = stack_client_axis(batch_specs(cfg, shape, leading=(b,)), K)
+        shardings = (
+            _sharding_tree(mesh, params_pspecs(frozen, mesh, fsdp=fsdp)),
+            _sharding_tree(mesh, params_pspecs(trainable, mesh,
+                                               client_axis=True)),
+            _sharding_tree(mesh, params_pspecs(opt_state, mesh,
+                                               client_axis=True)),
+            _sharding_tree(mesh, batch_pspec(batch, mesh)),
+        )
+        fn = jax.jit(train_step, in_shardings=shardings,
+                     donate_argnums=(1, 2))
+        return fn.lower(frozen, trainable, opt_state, batch)
+
+    params = param_specs(model, trainable_dtype=jnp.bfloat16)
+    cache = cache_specs(model, shape)
+    batch = batch_specs(cfg, shape, leading=(shape.global_batch,))
+    if shape.kind == "prefill":
+        step = steps_lib.make_prefill_step(model, impl=impl, unroll=unroll)
+    else:
+        step = steps_lib.make_decode_step(model, impl=impl, unroll=unroll)
+    shardings = (
+        _sharding_tree(mesh, params_pspecs(params, mesh, fsdp=fsdp)),
+        _sharding_tree(mesh, batch_pspec(batch, mesh)),
+        _sharding_tree(mesh, cache_pspecs(cache, mesh)),
+    )
+    fn = jax.jit(step, in_shardings=shardings, donate_argnums=(2,))
+    return fn.lower(params, batch, cache)
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              loss_mode: str = "logits", microbatches: Optional[int] = None,
+              remat: bool = True, tag: str = "",
+              analysis: bool = True, fsdp=None) -> Dict[str, Any]:
+    """Two passes per combination:
+      FULL pass     — production config (layer scans, remat, microbatches):
+                      proves lowering+compile, gives memory_analysis().
+      ANALYSIS pass — unrolled layer scans, loop-free blocked/chunked ops,
+                      microbatches=1: HloCostAnalysis counts while-loop
+                      bodies only ONCE (verified empirically), so the
+                      unrolled variant is the one whose flops/bytes/
+                      collective numbers are exact.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = SplitModel(cfg, default_split_for(cfg))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    mb = microbatches or MICROBATCHES.get(arch, 1)
+
+    t0 = time.time()
+    with mesh:
+        lowered = _build_lowered(model, shape, mesh, loss_mode=loss_mode,
+                                 microbatches=mb, remat=remat, unroll=False,
+                                 impl="ref", fsdp=fsdp)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    n_chips = mesh.size
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "n_chips": n_chips, "loss_mode": loss_mode,
+        "microbatches": mb, "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1), "tag": tag,
+    }
+    try:
+        mem = compiled.memory_analysis()
+        result["memory"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        args_b = result["memory"].get("argument_size_in_bytes", 0)
+        temp_b = result["memory"].get("temp_size_in_bytes", 0)
+        result["memory"]["per_device_total_gb"] = round(
+            (args_b + temp_b) / n_chips / 2**30, 3)
+    except Exception as e:  # pragma: no cover
+        result["memory"] = {"error": str(e)}
+    full_text = compiled.as_text()
+    result["op_counts_full"] = hlo_util.count_ops(full_text)
+    # Collectives: from the compiled (SPMD-partitioned) production module,
+    # with while-loop bodies multiplied by their known_trip_count — the
+    # scan-over-layers correction. Per-device numbers.
+    coll = hlo_util.collective_bytes_tripcounted(full_text)
+    result["collective_bytes"] = coll
+    del compiled, lowered, full_text
+
+    if analysis:
+        # FLOPs/bytes: lowered (pre-SPMD, pre-optimization) cost analysis of
+        # the UNROLLED loop-free analysis variant at full depth — global,
+        # deterministic, and exact for flops (HloCostAnalysis counts while
+        # bodies once, so the production scanned module cannot be used).
+        # No compile needed. Bytes from unoptimized HLO are an unfused
+        # upper bound; the roofline also derives an analytic TPU-fused
+        # memory estimate (benchmarks/roofline.py).
+        t1 = time.time()
+        with mesh:
+            lowered_a = _build_lowered(
+                model, shape, mesh, loss_mode=loss_mode, microbatches=1,
+                remat=False, unroll=True, impl="analysis")
+        try:
+            cost = lowered_a.cost_analysis()
+            cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+            result["hlo_flops_global"] = float(cost.get("flops", 0.0))
+            result["hlo_bytes_global"] = float(
+                cost.get("bytes accessed", 0.0))
+        except Exception as e:  # pragma: no cover
+            result["hlo_flops_global"] = result["hlo_bytes_global"] = 0.0
+            result["cost_error"] = str(e)
+        result["hlo_flops"] = result["hlo_flops_global"] / n_chips
+        result["hlo_bytes"] = result["hlo_bytes_global"] / n_chips
+        result["analysis_lower_s"] = round(time.time() - t1, 1)
+        del lowered_a
+    else:
+        result["hlo_flops"] = result["hlo_bytes"] = 0.0
+        result["hlo_flops_global"] = result["hlo_bytes_global"] = 0.0
+
+    # roofline terms (seconds); HLO numbers are per-device under SPMD
+    flops, bytes_acc = result["hlo_flops"], result["hlo_bytes"]
+    result["roofline"] = {
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": bytes_acc / HBM_BW,
+        "collective_s": coll.get("total", 0) / ICI_BW,
+    }
+    terms = result["roofline"]
+    result["bottleneck"] = max(terms, key=terms.get)
+    mf = _model_flops(cfg, shape)
+    result["model_flops"] = mf
+    result["useful_flops_frac"] = (
+        mf / (flops * n_chips) if flops else 0.0)
+    return result
+
+
+def save_result(res: Dict[str, Any]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = f"__{res['tag']}" if res.get("tag") else ""
+    name = f"{res['arch']}__{res['shape']}__{res['mesh']}{tag}.json"
+    name = re.sub(r"[^A-Za-z0-9_.\-]", "_", name)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--sweep", action="store_true",
+                    help="all assigned archs x shapes")
+    ap.add_argument("--loss-mode", default="logits",
+                    choices=["logits", "fused"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--force-fsdp", action="store_true",
+                    help="paper-faithful baseline layout: always 2D-shard "
+                         "the frozen body (pre-§Perf-pair-C behaviour)")
+    ap.add_argument("--no-analysis", action="store_true",
+                    help="lowering proof only (multi-pod sweep)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.sweep or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.sweep or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                tag = f"__{args.tag}" if args.tag else ""
+                out = os.path.join(
+                    RESULTS_DIR, re.sub(r"[^A-Za-z0-9_.\-]", "_",
+                                        f"{arch}__{shape}__{mesh_name}{tag}.json"))
+                if args.skip_existing and os.path.exists(out):
+                    print(f"[skip] {arch} x {shape} x {mesh_name}")
+                    continue
+                print(f"[dryrun] {arch} x {shape} x {mesh_name} ...",
+                      flush=True)
+                try:
+                    res = lower_one(
+                        arch, shape, multi_pod=mp, loss_mode=args.loss_mode,
+                        microbatches=args.microbatches,
+                        remat=not args.no_remat, tag=args.tag,
+                        analysis=not args.no_analysis,
+                        fsdp=(True if args.force_fsdp else None))
+                    path = save_result(res)
+                    r = res["roofline"]
+                    print(f"  ok: compile={res['compile_s']}s "
+                          f"bottleneck={res['bottleneck']} "
+                          f"compute={r['compute_s']:.3e}s "
+                          f"mem={r['memory_s']:.3e}s "
+                          f"coll={r['collective_s']:.3e}s -> {path}",
+                          flush=True)
+                except Exception as e:
+                    failures.append((arch, shape, mesh_name, repr(e)))
+                    print(f"  FAIL: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-runs lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

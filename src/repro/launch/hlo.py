@@ -1,0 +1,149 @@
+"""HLO post-processing for the roofline analysis.
+
+cost_analysis() has no collective statistics, so we parse the (SPMD-
+partitioned) HLO text and sum the output-operand bytes of every collective
+op. Convention: reported bytes are the op's output tensor size — a uniform,
+reproducible proxy; ring-algorithm wire amplification factors (2(n-1)/n for
+all-reduce etc.) are applied in the roofline, not here.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.  f32[16,4096,128]{2,1,0}   or  bf16[]
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# an HLO instruction line:  %name = <shape(s)> opcode(...)
+_INSTR_RE = re.compile(
+    r"=\s*(\(?[a-z0-9_\[\],\s{}/<>]*?\)?)\s*"
+    r"(" + "|".join(COLLECTIVES) + r")(-start|-done)?\(")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of output bytes per collective kind (plus 'total')."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        shape_text, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # counted at -start
+        out[kind] += _shape_bytes(shape_text)
+    out["total"] = sum(v for k, v in out.items())
+    return dict(out)
+
+
+def count_ops(hlo_text: str, opcodes=("fusion", "custom-call", "dot",
+                                      "convolution")) -> Dict[str, int]:
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        for op in opcodes + COLLECTIVES:
+            if f" {op}(" in line:
+                counts[op] += 1
+    return dict(counts)
+
+
+# ---------------------------------------------------------------- while-aware
+# note: params may be tuple-typed (nested parens) -> greedy .* is required
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?body=\s*%?([\w.\-]+)", re.DOTALL)
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    comps: Dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo_text.splitlines():
+        m = _COMP_HEAD_RE.match(line.strip())
+        if m and ("{" in line):
+            if cur_name:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name, cur_lines = m.group(1), [line]
+            if line.strip().startswith("ENTRY"):
+                comps.setdefault("__entry_alias__", "")
+                comps["__entry_name__"] = m.group(1)
+        elif cur_name:
+            cur_lines.append(line)
+    if cur_name:
+        comps[cur_name] = "\n".join(cur_lines)
+    return comps
+
+
+def collective_bytes_tripcounted(hlo_text: str) -> Dict[str, int]:
+    """Collective output bytes with while-loop bodies multiplied by their
+    known_trip_count (scan-over-layers correction). Computations reached
+    from multiple while sites accumulate each site's multiplier."""
+    comps = _split_computations(hlo_text)
+    entry = comps.get("__entry_name__")
+    if entry is None:
+        return collective_bytes(hlo_text)
+
+    # edges: (parent_comp, child_comp, trip). while bodies carry their
+    # known_trip_count; call/conditional targets (to_apply=..., branch
+    # computations) carry 1.
+    sites = []
+    call_re = re.compile(r"to_apply=\s*%?([\w.\-]+)")
+    for name, text in comps.items():
+        if name.startswith("__"):
+            continue
+        for line in text.splitlines():
+            if " while(" in line:
+                mb = _WHILE_RE.search(line)
+                if mb:
+                    mt = _TRIP_RE.search(line)
+                    sites.append((name, mb.group(1),
+                                  int(mt.group(1)) if mt else 1))
+                continue
+            if " call(" in line or " conditional(" in line:
+                for child in call_re.findall(line):
+                    sites.append((name, child, 1))
+
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # propagate multipliers (loop nesting depth is tiny; iterate to fixpoint)
+    for _ in range(8):
+        changed = False
+        for parent, body, trip in sites:
+            if mult.get(parent, 0) and mult.get(body, 0) != mult[parent] * trip:
+                mult[body] = mult[parent] * trip
+                changed = True
+        if not changed:
+            break
+
+    out: Dict[str, int] = defaultdict(int)
+    for name, text in comps.items():
+        if name.startswith("__"):
+            continue
+        per = collective_bytes(text)
+        if per.get("total", 0) == 0:
+            continue
+        # conservative fallback: a computation whose call chain we failed to
+        # parse still counts ONCE (never drop collectives silently)
+        m = mult.get(name, 0) or 1.0
+        for k, v in per.items():
+            out[k] += int(v * m)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)

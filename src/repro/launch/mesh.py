@@ -1,0 +1,32 @@
+"""Production mesh definitions (TPU v5e target).
+
+Single pod:  (data=16, model=16)            = 256 chips
+Multi-pod:   (pod=2, data=16, model=16)     = 512 chips
+
+SFPrompt mapping: the client plane is ('pod', 'data') — each index hosts a
+cohort of simulated clients, with per-client parameter copies sharded along
+it; the server plane is 'model' — the frozen body is tensor-parallel (and
+FSDP-sharded over 'data' for storage). Defined as a FUNCTION so importing
+this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_BW = 50e9                  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_parallel_size(mesh) -> int:
+    size = mesh.shape["data"]
+    if "pod" in mesh.shape:
+        size *= mesh.shape["pod"]
+    return size

@@ -1,0 +1,107 @@
+"""Input/parameter ShapeDtypeStruct builders for the multi-pod dry-run.
+
+No device allocation anywhere: params and caches come from jax.eval_shape
+over the real init functions, inputs are hand-built ShapeDtypeStructs.
+
+Assigned input shapes:
+  train_4k     seq=4096    global_batch=256   (training, SFPrompt phase-2)
+  prefill_32k  seq=32768   global_batch=32    (split-inference prefill)
+  decode_32k   seq=32768   global_batch=128   (split-inference decode)
+  long_500k    seq=524288  global_batch=1     (long-context decode; ring-
+               buffer window / native SSM state — DESIGN.md §skips)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.split import SplitModel
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+VLM_PATCH_FRACTION = 4  # 1/4 of the sequence is image patches
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, *,
+                leading: Tuple[int, ...], act_dtype=jnp.bfloat16
+                ) -> Dict[str, Any]:
+    """Model-input ShapeDtypeStructs with the given leading dims
+    (e.g. (K, b) for per-client training, (B,) for serving)."""
+    S = shape.seq
+    mk = lambda tail, dt: SDS(leading + tail, dt)
+
+    if cfg.arch_type == "vit":
+        n_patches = 196
+        return {"patches": mk((n_patches, 16 * 16 * 3), act_dtype),
+                "labels": mk((), jnp.int32)}
+
+    if shape.kind == "decode":
+        batch = {"tokens": mk((1,), jnp.int32), "pos": mk((), jnp.int32)}
+        return batch
+
+    batch = {}
+    if cfg.arch_type == "vlm":
+        npz = S // VLM_PATCH_FRACTION
+        batch["patch_embeds"] = mk((npz, cfg.d_model), act_dtype)
+        batch["mrope_positions"] = mk((3, npz), jnp.int32)  # client-axis first
+        batch["tokens"] = mk((S - npz,), jnp.int32)
+    elif cfg.arch_type == "audio":
+        batch["frames"] = mk((cfg.encoder.n_frames, cfg.d_model), act_dtype)
+        batch["tokens"] = mk((S,), jnp.int32)
+    else:
+        batch["tokens"] = mk((S,), jnp.int32)
+    return batch
+
+
+def cache_specs(model: SplitModel, shape: ShapeSpec, *,
+                dtype=jnp.bfloat16) -> Any:
+    """Decode-cache ShapeDtypeStructs (eval_shape over the real init).
+    long_500k uses the arch's ring-buffer window; decode_32k keeps the full
+    cache."""
+    window = None
+    if shape.name == "long_500k":
+        window = model.cfg.long_context_window
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq, dtype=dtype,
+                                 window=window))
+
+
+def param_specs(model: SplitModel, *, frozen_dtype=jnp.bfloat16,
+                trainable_dtype=jnp.float32) -> Any:
+    """Split-model parameter SDS tree: frozen segments in bf16, trainable
+    (tail, prompt) in f32 master precision."""
+    shapes = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+
+    def cast(tree, dt):
+        return jax.tree.map(lambda s: SDS(s.shape, dt), tree)
+
+    return {
+        "head": cast(shapes["head"], frozen_dtype),
+        "body": cast(shapes["body"], frozen_dtype),
+        "tail": cast(shapes["tail"], trainable_dtype),
+        "prompt": cast(shapes["prompt"], trainable_dtype),
+    }
+
+
+def stack_client_axis(tree: Any, k: int) -> Any:
+    return jax.tree.map(lambda s: SDS((k,) + s.shape, s.dtype), tree)

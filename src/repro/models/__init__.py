@@ -1,0 +1,4 @@
+from repro.models.config import (  # noqa: F401
+    AttentionConfig, EncoderConfig, Mamba2Config, MLAConfig, ModelConfig,
+    MoEConfig, RWKV6Config)
+from repro.models.transformer import Transformer  # noqa: F401

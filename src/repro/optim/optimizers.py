@@ -1,0 +1,86 @@
+"""Pure-JAX optimizers (optax-style (init, update) pairs, pytree-generic).
+
+Used for both the client-side (tail, prompt) updates and the full-model
+baselines. States are pytrees, so they vmap over the client axis for
+per-client optimizer state in the federated phases.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]  # (grads, state, params) -> (updates, state)
+
+
+def sgd(lr: Schedule, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mom = (jax.tree.map(jnp.zeros_like, params) if momentum else None)
+        return {"step": jnp.zeros((), jnp.int32), "mom": mom}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g,
+                               state["mom"], grads)
+            updates = jax.tree.map(lambda m: -lr_t * m, mom)
+            return updates, {"step": step, "mom": mom}
+        updates = jax.tree.map(lambda g: -lr_t * g, grads)
+        return updates, {"step": step, "mom": None}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(jnp.zeros_like, params)
+        return {"step": jnp.zeros((), jnp.int32), "mu": z,
+                "nu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          state["nu"], grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mhat = m / c1
+            vhat = v / c2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p
+            return -lr_t * u
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm

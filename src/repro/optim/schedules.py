@@ -1,0 +1,27 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def f(step):
+        s = step.astype(jnp.float32)
+        return lr * jnp.minimum(1.0, s / max(warmup_steps, 1))
+    return f
+
+
+def cosine_decay(lr: float, total_steps: int, warmup_steps: int = 0,
+                 final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / max(warmup_steps, 1)) if warmup_steps else 1.0
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * warm * cos
+    return f

@@ -1,0 +1,2 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_pspec, cache_pspecs, params_pspecs, guard_divisibility)

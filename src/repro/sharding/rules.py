@@ -1,0 +1,164 @@
+"""Name-based partition rules for the SFPrompt mesh mapping.
+
+Client plane: tensors with a leading client axis (trainable tail/prompt
+copies, per-client batches) shard that axis over ('pod', 'data').
+Server plane: the frozen body is tensor-parallel over 'model' — attention
+projections by heads, MLP by d_ff, MoE by experts, embeddings/LM head by
+vocab.
+
+Rules are right-aligned to trailing dims, so the same rule covers a bare
+(D, F) leaf and its scan-stacked (n_layers, D, F) form. Every assignment is
+divisibility-guarded: a dim that does not divide its mesh axis is replicated
+on that axis instead — lowering is correct-by-construction for e.g.
+kv_heads=8 on model=16.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path regex, trailing-dims spec). First match wins.
+_PARAM_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    # --- embeddings / output head: vocab-parallel
+    (r"embed/tok$", ("model", None)),
+    (r"embed/(patch)/w$", (None, None)),
+    (r"embed/(cls|pos)$", (None, None)),
+    (r"(^|/)head/w$", (None, "model")),
+    # --- MoE experts: expert-parallel
+    (r"experts/(up|gate|down)$", ("model", None, None)),
+    (r"router/w$", (None, None)),
+    # --- attention projections: head-parallel (output dim)
+    (r"(q|k|v|q_a|q_b|kv_a|kv_b|cq|ck|cv|g|r)/w$", (None, "model")),
+    (r"(o|co)/w$", ("model", None)),
+    # --- MLP: d_ff-parallel
+    (r"(up|gate|ck)/w$", (None, "model")),
+    (r"(down|cv)/w$", ("model", None)),
+    # --- mamba2 / rwkv6 projections
+    (r"in_proj/w$", (None, "model")),
+    (r"out_proj/w$", ("model", None)),
+    (r"(w_lora_a|w_lora_b)$", (None, None)),
+    # --- everything else (norms, biases, scalars): replicated
+)
+
+
+def _rule_for(path: str) -> Tuple:
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path):
+            return spec
+    return ()
+
+
+def guard_divisibility(spec: Tuple, shape: Tuple[int, ...],
+                       mesh: Mesh) -> P:
+    """Drop axis assignments whose dim is not divisible by the axis size."""
+    out = []
+    for dim, axis in zip(shape, spec):
+        if axis is None:
+            out.append(None)
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(axis if dim % size == 0 and dim > 0 else None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def params_pspecs(params_shape: Any, mesh: Mesh, *,
+                  client_axis: bool = False, fsdp: bool = False,
+                  fsdp_threshold: int = 1 << 21) -> Any:
+    """Pytree of PartitionSpec for a (possibly ShapeDtypeStruct) params tree.
+
+    client_axis=True: leaves carry a leading client axis K sharded over
+    ('pod', 'data') (whichever exist in the mesh).
+    fsdp=True: large leaves additionally shard their biggest still-
+    replicated dim over 'data' — 2D weight sharding for the frozen server
+    body (FSDP-style storage; XLA chooses gather-weights vs partial-sum
+    activations per op)."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    data_axes = data_axes if len(data_axes) > 1 else (
+        data_axes[0] if data_axes else None)
+
+    def leaf_spec(path, leaf):
+        shape = tuple(leaf.shape)
+        spec = tuple(_rule_for(_path_str(path)))
+        lead = 1 if client_axis else 0
+        # right-align the rule to the trailing dims
+        n_lead = len(shape) - len(spec) - lead
+        if n_lead < 0:
+            spec = spec[-len(shape) + lead:] if len(shape) > lead else ()
+            n_lead = len(shape) - len(spec) - lead
+        full = ((data_axes,) if client_axis else ()) + \
+            (None,) * n_lead + spec
+        guarded = list(guard_divisibility(full, shape, mesh))
+        guarded += [None] * (len(shape) - len(guarded))
+
+        if (fsdp and not client_axis and "data" in mesh.shape
+                and int(np.prod(shape, dtype=np.int64)) >= fsdp_threshold):
+            dsize = mesh.shape["data"]
+            for i in sorted(range(len(shape)), key=lambda i: -shape[i]):
+                if guarded[i] is None and shape[i] % dsize == 0 \
+                        and shape[i] >= dsize:
+                    guarded[i] = "data"
+                    break
+        return P(*guarded)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def batch_pspec(batch_shape: Any, mesh: Mesh, *,
+                client_axis: bool = False) -> Any:
+    """Batch tensors: leading (K?) and batch dims shard over ('pod','data');
+    everything else replicated."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    data_axes = data_axes if len(data_axes) > 1 else (
+        data_axes[0] if data_axes else None)
+
+    def leaf_spec(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        spec = (data_axes,) + (None,) * (len(shape) - 1)
+        return guard_divisibility(spec, shape, mesh)
+
+    return jax.tree.map(leaf_spec, batch_shape)
+
+
+def cache_pspecs(cache_shape: Any, mesh: Mesh) -> Any:
+    """KV/state caches: (n_layers, B, W, heads, dh)-style leaves — batch dim
+    (axis 1) over ('pod','data'); the heads/latent dim over 'model' when
+    divisible."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    data_axes = data_axes if len(data_axes) > 1 else (
+        data_axes[0] if data_axes else None)
+
+    def leaf_spec(path, leaf):
+        shape = tuple(leaf.shape)
+        name = _path_str(path)
+        if len(shape) < 2:
+            return P(*([None] * len(shape)))
+        spec = [None] * len(shape)
+        spec[1] = data_axes                      # batch
+        if re.search(r"(^|/)(k|v)$", name) and len(shape) == 5:
+            spec[3] = "model"                    # kv heads
+        if re.search(r"(^|/)ssm$", name) and len(shape) == 5:
+            spec[2] = "model"                    # mamba heads
+        if re.search(r"(^|/)state$", name) and len(shape) == 5:
+            spec[2] = "model"                    # rwkv heads
+        return guard_divisibility(tuple(spec), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)

@@ -1,0 +1,59 @@
+"""HLO collective-parsing unit tests (the roofline's collective source)."""
+from repro.launch.hlo import (collective_bytes, collective_bytes_tripcounted,
+                              count_ops)
+
+SIMPLE = """
+HloModule test
+
+ENTRY %main.1 (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ar = f32[16,128]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add.1
+  %ag = bf16[32,64]{1,0} all-gather(%p0), dimensions={0}
+  ROOT %out = f32[16,128]{1,0} copy(%ar)
+}
+"""
+
+NESTED = """
+HloModule test
+
+%body.2 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arr = f32[8,8]{1,0} all-reduce(%x), to_apply=%add.9
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %arr)
+}
+
+%helper.7 (q: f32[4,4]) -> f32[4,4] {
+  %cp = f32[4,4]{1,0} collective-permute(%q), source_target_pairs={{0,1}}
+  ROOT %r = f32[4,4]{1,0} copy(%cp)
+}
+
+ENTRY %main.9 (p0: f32[8,8]) -> f32[8,8] {
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond.3, body=%body.2, backend_config={"known_trip_count":{"n":"10"}}
+  %h = f32[4,4]{1,0} call(%p1), to_apply=%helper.7
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_bytes_simple():
+    c = collective_bytes(SIMPLE)
+    assert c["all-reduce"] == 16 * 128 * 4
+    assert c["all-gather"] == 32 * 64 * 2
+    assert c["total"] == 16 * 128 * 4 + 32 * 64 * 2
+
+
+def test_tripcount_multiplies_while_bodies():
+    c = collective_bytes_tripcounted(NESTED)
+    assert c["all-reduce"] == 10 * 8 * 8 * 4        # x known_trip_count
+    assert c["collective-permute"] == 4 * 4 * 4     # call target counted 1x
+
+
+def test_unparsed_computations_still_counted_once():
+    # a computation with collectives but no parsed call chain must not drop
+    orphan = NESTED.replace("body=%body.2", "body=%somewhere.else")
+    c = collective_bytes_tripcounted(orphan)
+    assert c["all-reduce"] >= 8 * 8 * 4             # counted at least once
+
+
+def test_count_ops():
+    ops = count_ops(SIMPLE)
+    assert ops["all-reduce"] == 1 and ops["all-gather"] == 1

@@ -1,0 +1,184 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes, plus the loop-free analysis variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.el2n.ops import el2n_scores
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.mamba2_scan.ops import mamba2_scan
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+
+K = jax.random.PRNGKey
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("B,S,Hq,Hkv,D", [
+    (1, 128, 4, 4, 32),      # MHA
+    (2, 192, 8, 2, 64),      # GQA 4x
+    (1, 96, 4, 1, 32),       # MQA, non-multiple-of-block seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(B, S, Hq, Hkv, D, dtype):
+    q = jax.random.normal(K(0), (B, S, Hq, D), dtype)
+    k = jax.random.normal(K(1), (B, S, Hkv, D), dtype)
+    v = jax.random.normal(K(2), (B, S, Hkv, D), dtype)
+    ref = flash_attention(q, k, v, impl="ref")
+    out = flash_attention(q, k, v, impl="interpret", block_q=64, block_kv=64)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("kw", [
+    dict(sliding_window=50),
+    dict(softcap=30.0),
+    dict(causal=False),
+    dict(sliding_window=33, softcap=10.0),
+])
+def test_flash_attention_variants(kw):
+    B, S, Hq, Hkv, D = 2, 160, 4, 2, 32
+    q = jax.random.normal(K(0), (B, S, Hq, D))
+    k = jax.random.normal(K(1), (B, S, Hkv, D))
+    v = jax.random.normal(K(2), (B, S, Hkv, D))
+    ref = flash_attention(q, k, v, impl="ref", **kw)
+    pallas = flash_attention(q, k, v, impl="interpret", block_q=64,
+                             block_kv=64, **kw)
+    blocked = flash_attention(q, k, v, impl="blocked", **kw)
+    np.testing.assert_allclose(np.asarray(pallas), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_decode_ring_buffer():
+    """Ref path with explicit kv positions = ring-buffer decode semantics."""
+    B, W, Hq, D = 2, 32, 2, 16
+    q = jax.random.normal(K(0), (B, 1, Hq, D))
+    k = jax.random.normal(K(1), (B, W, Hq, D))
+    v = jax.random.normal(K(2), (B, W, Hq, D))
+    # slots hold positions 40-71 in ring order; query at 71
+    pos = (40 + (jnp.arange(W) + 8) % W)[None, :].repeat(B, 0)
+    out = flash_attention(q, k, v, q_offset=jnp.full((B,), 71),
+                          kv_positions=pos)
+    # equivalent: sort kv by position, plain causal
+    order = jnp.argsort(pos[0])
+    out2 = flash_attention(q, k[:, order], v[:, order],
+                           q_offset=jnp.full((B,), 71),
+                           kv_positions=pos[:, order])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ------------------------------------------------------------------- el2n
+@pytest.mark.parametrize("N,V", [(4, 64), (32, 1000), (64, 4096), (16, 33000)])
+def test_el2n_kernel(N, V):
+    logits = jax.random.normal(K(0), (N, V)) * 4
+    labels = jax.random.randint(K(1), (N,), 0, V)
+    r_e, r_c = el2n_scores(logits, labels, impl="ref")
+    k_e, k_c = el2n_scores(logits, labels, impl="interpret", block_v=512)
+    np.testing.assert_allclose(np.asarray(k_e), np.asarray(r_e), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(k_c), np.asarray(r_c), rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_el2n_matches_naive():
+    N, V = 16, 300
+    logits = jax.random.normal(K(0), (N, V)) * 3
+    labels = jax.random.randint(K(1), (N,), 0, V)
+    el2n, ce = el2n_scores(logits, labels, impl="ref")
+    probs = jax.nn.softmax(logits, -1)
+    onehot = jax.nn.one_hot(labels, V)
+    naive = jnp.linalg.norm(probs - onehot, axis=-1)
+    np.testing.assert_allclose(np.asarray(el2n), np.asarray(naive),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------- rwkv6
+@pytest.mark.parametrize("T,chunk", [(64, 16), (100, 32), (128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_kernel(T, chunk, dtype):
+    B, H, Kd, V = 2, 2, 16, 16
+    r = jax.random.normal(K(0), (B, T, H, Kd), dtype)
+    k = jax.random.normal(K(1), (B, T, H, Kd), dtype)
+    v = jax.random.normal(K(2), (B, T, H, V), dtype)
+    w = -jnp.exp(jax.random.normal(K(3), (B, T, H, Kd))).astype(dtype)
+    u = jax.random.normal(K(4), (H, Kd), dtype)
+    s0 = jax.random.normal(K(5), (B, H, Kd, V))
+    y_ref, f_ref = rwkv6_scan(r, k, v, w, u, s0, impl="ref")
+    y_pal, f_pal = rwkv6_scan(r, k, v, w, u, s0, impl="interpret",
+                              chunk=chunk)
+    y_chk, f_chk = rwkv6_scan(r, k, v, w, u, s0, impl="chunked", chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_pal, np.float32),
+                               np.asarray(y_ref, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(f_pal), np.asarray(f_ref),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(y_chk, np.float32),
+                               np.asarray(y_ref, np.float32), **_tol(dtype))
+
+
+def test_rwkv6_strong_decay_stable():
+    """Chunked form must not overflow for strong decays (the instability
+    that rules out the naive factorized GLA form)."""
+    B, T, H, Kd, V = 1, 96, 1, 8, 8
+    r = jax.random.normal(K(0), (B, T, H, Kd))
+    k = jax.random.normal(K(1), (B, T, H, Kd))
+    v = jax.random.normal(K(2), (B, T, H, V))
+    w = jnp.full((B, T, H, Kd), -12.0)  # decay ~ e^-12 per step
+    u = jax.random.normal(K(4), (H, Kd))
+    y_ref, _ = rwkv6_scan(r, k, v, w, u, impl="ref")
+    y_chk, _ = rwkv6_scan(r, k, v, w, u, impl="chunked", chunk=32)
+    assert bool(jnp.all(jnp.isfinite(y_chk)))
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------- mamba2
+@pytest.mark.parametrize("T,G,chunk", [(64, 1, 16), (100, 2, 32),
+                                       (128, 4, 64)])
+def test_mamba2_kernel(T, G, chunk):
+    B, H, P, N = 2, 4, 16, 8
+    x = jax.random.normal(K(0), (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(K(1), (B, T, H)))
+    A = -jnp.exp(jax.random.normal(K(2), (H,)))
+    Bm = jax.random.normal(K(3), (B, T, G, N))
+    Cm = jax.random.normal(K(4), (B, T, G, N))
+    h0 = jax.random.normal(K(5), (B, H, P, N))
+    y_ref, f_ref = mamba2_scan(x, dt, A, Bm, Cm, h0, impl="ref")
+    y_pal, f_pal = mamba2_scan(x, dt, A, Bm, Cm, h0, impl="interpret",
+                               chunk=chunk)
+    y_chk, f_chk = mamba2_scan(x, dt, A, Bm, Cm, h0, impl="chunked",
+                               chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(f_pal), np.asarray(f_ref),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(f_chk), np.asarray(f_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_mamba2_streaming_equals_full():
+    """Processing in two halves with carried state == one pass."""
+    B, T, H, P, G, N = 1, 64, 2, 8, 1, 8
+    x = jax.random.normal(K(0), (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(K(1), (B, T, H)))
+    A = -jnp.exp(jax.random.normal(K(2), (H,)))
+    Bm = jax.random.normal(K(3), (B, T, G, N))
+    Cm = jax.random.normal(K(4), (B, T, G, N))
+    y_full, f_full = mamba2_scan(x, dt, A, Bm, Cm, impl="ref")
+    y1, h = mamba2_scan(x[:, :32], dt[:, :32], A, Bm[:, :32], Cm[:, :32],
+                        impl="ref")
+    y2, f2 = mamba2_scan(x[:, 32:], dt[:, 32:], A, Bm[:, 32:], Cm[:, 32:],
+                         h, impl="ref")
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f2), np.asarray(f_full),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,177 @@
+"""Per-arch smoke tests (assignment requirement): a REDUCED same-family
+variant of each of the 10 assigned architectures runs one forward/train step
+on CPU with correct output shapes and no NaNs; decode against the KV cache
+matches the full-sequence forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, all_configs, get_config
+from repro.core import losses
+from repro.models.transformer import Transformer
+from repro.optim import apply_updates, sgd
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=24, with_labels=False, seed=0):
+    k = jax.random.PRNGKey(seed)
+    if cfg.arch_type == "vit":
+        b = {"patches": 0.1 * jax.random.normal(k, (B, 16, 16 * 16 * 3))}
+        if with_labels:
+            b["labels"] = jax.random.randint(k, (B,), 0, cfg.num_classes)
+        return b
+    b = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+    if cfg.arch_type == "vlm":
+        b["patch_embeds"] = 0.02 * jax.random.normal(k, (B, 8, cfg.d_model))
+        grid = jnp.stack(jnp.meshgrid(jnp.arange(2), jnp.arange(2),
+                                      jnp.arange(2), indexing="ij"))
+        b["mrope_positions"] = jnp.broadcast_to(
+            grid.reshape(3, 8)[None], (B, 3, 8)).astype(jnp.int32)
+    if cfg.arch_type == "audio":
+        b["frames"] = 0.02 * jax.random.normal(
+            k, (B, cfg.encoder.n_frames, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_smoke_forward(arch):
+    cfg = get_config(arch).reduced()
+    model = Transformer(cfg)
+    params = model.init(KEY)
+    batch = make_batch(cfg)
+    out = model.apply(params, batch, mode="train")
+    B = 2
+    T = out["logits"].shape[1]
+    assert out["logits"].shape[0] == B
+    assert out["logits"].shape[-1] == (cfg.num_classes or cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(out["logits"])))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_smoke_train_step(arch):
+    """One SGD step decreases (or at least computes) the LM/classifier loss
+    with finite grads."""
+    cfg = get_config(arch).reduced()
+    model = Transformer(cfg)
+    params = model.init(KEY)
+    batch = make_batch(cfg, with_labels=True)
+    opt = sgd(1e-2)
+
+    def loss_fn(p):
+        out = model.apply(p, batch, mode="train")
+        loss, _ = losses.task_loss(cfg, out, batch, impl="ref")
+        return loss
+
+    loss0, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss0))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+    updates, _ = opt.update(grads, opt.init(params), params)
+    loss1 = loss_fn(apply_updates(params, updates))
+    assert bool(jnp.isfinite(loss1))
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED])
+def test_decode_matches_full(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.arch_type == "vit":
+        pytest.skip("classifier: no decode")
+    model = Transformer(cfg)
+    params = model.init(KEY)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+    bf = {"tokens": toks}
+    bp = {"tokens": toks[:, :S]}
+    extra = 0
+    if cfg.arch_type == "vlm":
+        pe = 0.02 * jax.random.normal(KEY, (B, 8, cfg.d_model))
+        bf["patch_embeds"] = pe
+        bp["patch_embeds"] = pe
+        extra = 8
+    if cfg.arch_type == "audio":
+        fr = 0.02 * jax.random.normal(KEY, (B, cfg.encoder.n_frames,
+                                            cfg.d_model))
+        bf["frames"] = fr
+        bp["frames"] = fr
+    full = model.apply(params, bf, mode="train")["logits"]
+    cache = model.init_cache(B, seq_len=64)
+    pre = model.apply(params, bp, mode="prefill", cache=cache)
+    dec = model.apply(params, {"tokens": toks[:, S:S + 1],
+                               "pos": jnp.full((B,), S + extra, jnp.int32)},
+                      mode="decode", cache=pre["cache"])
+    np.testing.assert_allclose(
+        np.asarray(dec["logits"][:, 0]), np.asarray(full[:, -1]),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_ring_buffer_decode_matches_full_window():
+    """gemma2 sliding-window decode with a ring-buffer cache smaller than
+    the sequence == full-cache decode (the window hides the difference)."""
+    cfg = get_config("gemma2-9b").reduced()
+    model = Transformer(cfg)
+    params = model.init(KEY)
+    B, S = 1, 40
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+    full_cache = model.init_cache(B, seq_len=S + 1)
+    ring_cache = model.init_cache(B, seq_len=S + 1,
+                                  window=cfg.attention.sliding_window)
+    outs = []
+    for cache in (full_cache, ring_cache):
+        pre = model.apply(params, {"tokens": toks[:, :S]}, mode="prefill",
+                          cache=cache)
+        dec = model.apply(params, {"tokens": toks[:, S:S + 1],
+                                   "pos": jnp.full((B,), S, jnp.int32)},
+                          mode="decode", cache=pre["cache"])
+        outs.append(np.asarray(dec["logits"][:, 0]))
+    # local layers see identical windows; global layers differ only beyond
+    # the ring window — with S < window they are identical too
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-4, atol=2e-4)
+
+
+def test_multi_step_decode_consistency():
+    """Greedy 4-step decode == teacher-forced full forward (stablelm)."""
+    cfg = get_config("stablelm-12b").reduced()
+    model = Transformer(cfg)
+    params = model.init(KEY)
+    B, S, n_new = 1, 12, 4
+    toks = jax.random.randint(KEY, (B, S + n_new), 0, cfg.vocab_size)
+    full = model.apply(params, {"tokens": toks}, mode="train")["logits"]
+    cache = model.init_cache(B, seq_len=S + n_new)
+    pre = model.apply(params, {"tokens": toks[:, :S]}, mode="prefill",
+                      cache=cache)
+    cache = pre["cache"]
+    for i in range(n_new):
+        out = model.apply(params, {"tokens": toks[:, S + i:S + i + 1],
+                                   "pos": jnp.full((B,), S + i, jnp.int32)},
+                          mode="decode", cache=cache)
+        cache = out["cache"]
+        np.testing.assert_allclose(np.asarray(out["logits"][:, 0]),
+                                   np.asarray(full[:, S + i - 1 + 1]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_zamba2_weight_sharing():
+    """The shared attention block is one parameter set used at every site."""
+    cfg = get_config("zamba2-2.7b").reduced()
+    model = Transformer(cfg)
+    params = model.init(KEY)
+    assert "shared_attn" in params
+    # shared positions carry no per-layer weights of their own
+    for i, kind in enumerate(cfg.layer_pattern):
+        if kind == "shared_attn":
+            assert f"pos{i}" not in params["cycle"]
+
+
+def test_param_count_sane():
+    """Analytic param_count is within 2% of the actual initialized count
+    for every full-size assigned config (drives the Table-1 cost model)."""
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        model = Transformer(cfg)
+        shapes = jax.eval_shape(model.init, KEY)
+        actual = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.02, \
+            (arch, actual, analytic)

@@ -1,0 +1,142 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import fedavg
+from repro.core.comm import (CostInputs, fl_comm, sfl_comm, sfprompt_comm,
+                             sfprompt_compute_paper, sfl_compute)
+from repro.core.pruning import prune_indices
+from repro.kernels.el2n.ops import el2n_scores
+from repro.models.layers import apply_rope, rope_cos_sin
+from repro.optim import adamw, apply_updates, sgd
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ------------------------------------------------------------------ EL2N
+@given(n=st.integers(2, 16), v=st.integers(2, 80),
+       scale=st.floats(0.1, 20.0), seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_el2n_bounds_and_identity(n, v, scale, seed):
+    """0 <= EL2N <= sqrt(2); fused identity == naive computation."""
+    k = jax.random.PRNGKey(seed)
+    logits = scale * jax.random.normal(k, (n, v))
+    labels = jax.random.randint(jax.random.fold_in(k, 1), (n,), 0, v)
+    el2n, ce = el2n_scores(logits, labels, impl="ref")
+    assert np.all(np.asarray(el2n) >= -1e-6)
+    assert np.all(np.asarray(el2n) <= np.sqrt(2) + 1e-5)
+    assert np.all(np.asarray(ce) >= -1e-5)
+    probs = jax.nn.softmax(logits, -1)
+    naive = jnp.linalg.norm(probs - jax.nn.one_hot(labels, v), axis=-1)
+    np.testing.assert_allclose(np.asarray(el2n), np.asarray(naive),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------------ FedAvg
+@given(k=st.integers(1, 6), seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_fedavg_convexity(k, seed):
+    """Weighted mean stays within per-coordinate min/max; identical client
+    trees aggregate to themselves."""
+    key = jax.random.PRNGKey(seed)
+    trees = {"a": jax.random.normal(key, (k, 5)),
+             "b": {"c": jax.random.normal(jax.random.fold_in(key, 1),
+                                          (k, 2, 3))}}
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (k,))) + 0.1
+    agg = fedavg(trees, w)
+    for leaf, full in ((agg["a"], trees["a"]),
+                       (agg["b"]["c"], trees["b"]["c"])):
+        lo = np.asarray(full).min(0) - 1e-5
+        hi = np.asarray(full).max(0) + 1e-5
+        assert np.all(np.asarray(leaf) >= lo) and np.all(np.asarray(leaf) <= hi)
+    same = jax.tree.map(lambda x: jnp.broadcast_to(x[:1], x.shape), trees)
+    agg2 = fedavg(same, w)
+    np.testing.assert_allclose(np.asarray(agg2["a"]),
+                               np.asarray(trees["a"][0]), rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------ pruning
+@given(n=st.integers(4, 100), gamma=st.floats(0.0, 0.9),
+       seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_prune_keeps_top_scores(n, gamma, seed):
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    idx = prune_indices(scores, gamma)
+    keep = len(idx)
+    assert keep == max(1, n - int(gamma * n))
+    kept = np.asarray(scores)[np.asarray(idx)]
+    dropped = np.delete(np.asarray(scores), np.asarray(idx))
+    if len(dropped):
+        assert kept.min() >= dropped.max() - 1e-6
+
+
+# ------------------------------------------------------------------ comm model
+@given(W=st.floats(1e6, 1e12), D=st.integers(10, 10_000),
+       U=st.integers(1, 20), gamma_keep=st.floats(0.05, 1.0),
+       q=st.floats(1e3, 1e7))
+@settings(**SETTINGS)
+def test_cost_model_orderings(W, D, U, gamma_keep, q):
+    """Paper's qualitative claims hold in the implemented Table-1 model:
+    (i) SFPrompt comm < SFL comm;
+    (ii) pruning more (smaller gamma_keep) never increases SFPrompt comm;
+    (iii) client compute of split methods < FL's."""
+    c = CostInputs(W=W, alpha=0.1, tau=0.8, q=q, D=D, U=U,
+                   gamma_keep=gamma_keep)
+    assert sfprompt_comm(c) < sfl_comm(c)
+    c_less = CostInputs(W=W, alpha=0.1, tau=0.8, q=q, D=D, U=U,
+                        gamma_keep=gamma_keep * 0.5)
+    assert sfprompt_comm(c_less) <= sfprompt_comm(c) + 1e-6
+    assert sfprompt_compute_paper(c) < 6 * D * W * U  # < FL per-client
+    assert sfl_compute(c) < 6 * D * W * U
+
+
+# ------------------------------------------------------------------ RoPE
+@given(s=st.integers(2, 32), d=st.integers(2, 32).map(lambda x: 2 * x),
+       theta=st.floats(100.0, 1e6), seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_rope_preserves_norm_and_relative(s, d, theta, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (1, s, 2, d))
+    pos = jnp.arange(s)[None, :]
+    cos, sin = rope_cos_sin(pos, d, theta)
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-4, atol=1e-4)
+    # relative property: <R(p)q, R(p+k)v> depends only on k
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 1, 1, d))
+    def dot_at(p1, p2):
+        c1, s1 = rope_cos_sin(jnp.array([[p1]]), d, theta)
+        c2, s2 = rope_cos_sin(jnp.array([[p2]]), d, theta)
+        return float(jnp.sum(apply_rope(q, c1, s1) * apply_rope(v, c2, s2)))
+    assert abs(dot_at(0, 3) - dot_at(5, 8)) < 1e-3
+
+
+# ------------------------------------------------------------------ optim
+@given(lr=st.floats(1e-4, 0.5), seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_sgd_descends_quadratic(lr, seed):
+    key = jax.random.PRNGKey(seed)
+    x = {"p": jax.random.normal(key, (6,))}
+    opt = sgd(lr)
+    state = opt.init(x)
+    f = lambda t: 0.5 * jnp.sum(t["p"] ** 2)
+    for _ in range(3):
+        g = jax.grad(f)(x)
+        upd, state = opt.update(g, state, x)
+        x_new = apply_updates(x, upd)
+        assert f(x_new) <= f(x) + 1e-6
+        x = x_new
+
+
+def test_adamw_state_shapes():
+    x = {"a": jnp.ones((3, 4)), "b": jnp.zeros((2,))}
+    opt = adamw(1e-3, weight_decay=0.01)
+    st_ = opt.init(x)
+    g = jax.tree.map(jnp.ones_like, x)
+    upd, st2 = opt.update(g, st_, x)
+    assert jax.tree.structure(upd) == jax.tree.structure(x)
+    assert int(st2["step"]) == 1

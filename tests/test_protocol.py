@@ -1,0 +1,138 @@
+"""Integration tests: the three-phase SFPrompt protocol and the baselines
+run end-to-end on a tiny ViT and actually learn."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (BaselineConfig, FLTrainer, ProtocolConfig,
+                        SFLTrainer, SFPromptTrainer, SplitConfig, SplitModel)
+from repro.core.aggregation import broadcast_to_clients, fedavg
+from repro.data import (DATASETS, iid_partition, select_clients,
+                        stack_clients, synthetic_image_dataset)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_config("vit-base").reduced(n_layers=3, d_model=64, d_ff=128)
+    split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=4,
+                        prune_gamma=0.5, local_epochs=1)
+    model = SplitModel(cfg, split)
+    data = synthetic_image_dataset(DATASETS["cifar10-syn"], 320, seed=0,
+                                   image_hw=32)
+    clients = iid_partition(data, 8, seed=0)
+    test = synthetic_image_dataset(DATASETS["cifar10-syn"], 64, seed=1,
+                                   image_hw=32)
+    return cfg, split, model, clients, test
+
+
+def _round_batch(clients, k, r):
+    idx = select_clients(len(clients), k, seed=0, round_idx=r)
+    return {kk: jnp.asarray(v) for kk, v in
+            stack_clients(clients, idx).items()}
+
+
+def test_sfprompt_round_learns(tiny_setup):
+    cfg, split, model, clients, test = tiny_setup
+    pcfg = ProtocolConfig(clients_per_round=3, local_epochs=1, batch_size=8,
+                          lr_local=0.05, lr_split=0.05, momentum=0.0)
+    tr = SFPromptTrainer(model, pcfg)
+    state = tr.init(KEY)
+    losses = []
+    for r in range(3):
+        state, m = tr.round(state, _round_batch(clients, 3, r))
+        losses.append(m["split_loss"])
+        assert m["kept_frac"] <= 0.6  # gamma=0.5 pruning active
+    assert losses[-1] < losses[0]
+    ev = tr.evaluate(state["params"], test, batch_size=32)
+    assert np.isfinite(ev["ce"])
+
+
+def test_sfprompt_only_tail_and_prompt_change(tiny_setup):
+    cfg, split, model, clients, _ = tiny_setup
+    pcfg = ProtocolConfig(clients_per_round=2, local_epochs=1, batch_size=8)
+    tr = SFPromptTrainer(model, pcfg)
+    state = tr.init(KEY)
+    p0 = jax.tree.map(jnp.copy, state["params"])
+    state, _ = tr.round(state, _round_batch(clients, 2, 0))
+    p1 = state["params"]
+    same = lambda a, b: all(
+        bool(jnp.array_equal(x, y)) for x, y in
+        zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+    diff = lambda a, b: any(
+        not bool(jnp.array_equal(x, y)) for x, y in
+        zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+    assert same(p0["head"], p1["head"])    # frozen on the client
+    assert same(p0["body"], p1["body"])    # frozen on the server
+    assert diff(p0["tail"], p1["tail"])    # trained
+    assert diff(p0["prompt"], p1["prompt"])
+
+
+def test_local_loss_ablation_arm(tiny_setup):
+    """use_local_loss=False (Fig-6 arm) still runs and aggregates."""
+    cfg, split, model, clients, _ = tiny_setup
+    pcfg = ProtocolConfig(clients_per_round=2, local_epochs=1, batch_size=8,
+                          use_local_loss=False)
+    tr = SFPromptTrainer(model, pcfg)
+    state = tr.init(KEY)
+    state, m = tr.round(state, _round_batch(clients, 2, 0))
+    assert "local_loss" not in m
+    assert np.isfinite(m["split_loss"])
+
+
+def test_no_pruning_arm(tiny_setup):
+    cfg, split, model, clients, _ = tiny_setup
+    pcfg = ProtocolConfig(clients_per_round=2, local_epochs=1, batch_size=8,
+                          use_pruning=False)
+    tr = SFPromptTrainer(model, pcfg)
+    state = tr.init(KEY)
+    state, m = tr.round(state, _round_batch(clients, 2, 0))
+    assert "kept_frac" not in m
+
+
+def test_fl_baseline(tiny_setup):
+    cfg, split, model, clients, _ = tiny_setup
+    tr = FLTrainer(model, BaselineConfig(local_epochs=1, batch_size=8,
+                                         lr=0.05))
+    state = tr.init(KEY)
+    p0 = jax.tree.map(jnp.copy, state["params"])
+    state, m = tr.round(state, _round_batch(clients, 2, 0))
+    assert np.isfinite(m["train_loss"])
+    # FL trains everything including the body
+    assert any(not bool(jnp.array_equal(x, y)) for x, y in
+               zip(jax.tree.leaves(p0["body"]),
+                   jax.tree.leaves(state["params"]["body"])))
+
+
+@pytest.mark.parametrize("mode", ["ff", "linear"])
+def test_sfl_baselines(tiny_setup, mode):
+    cfg, split, model, clients, _ = tiny_setup
+    tr = SFLTrainer(model, BaselineConfig(local_epochs=1, batch_size=8,
+                                          lr=0.05), mode=mode)
+    state = tr.init(KEY)
+    p0 = jax.tree.map(jnp.copy, state["params"])
+    state, m = tr.round(state, _round_batch(clients, 2, 0))
+    assert np.isfinite(m["train_loss"])
+    body_changed = any(
+        not bool(jnp.array_equal(x, y)) for x, y in
+        zip(jax.tree.leaves(p0["body"]),
+            jax.tree.leaves(state["params"]["body"])))
+    head_changed = any(
+        not bool(jnp.array_equal(x, y)) for x, y in
+        zip(jax.tree.leaves(p0["head"]),
+            jax.tree.leaves(state["params"]["head"])))
+    if mode == "ff":
+        assert body_changed and head_changed
+    else:
+        assert not body_changed and not head_changed
+
+
+def test_fedavg_weighted():
+    trees = {"w": jnp.stack([jnp.ones((3,)), 3 * jnp.ones((3,))])}
+    out = fedavg(trees, jnp.array([1.0, 3.0]))
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.5 * np.ones(3))
+    back = broadcast_to_clients(out, 2)
+    assert back["w"].shape == (2, 3)
