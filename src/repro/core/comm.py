@@ -33,9 +33,13 @@ BYTES = 4  # fp32 for parameters on the wire
 # Calibration (EXPERIMENTS.md §Comm-cost): the paper's Table-2 numbers are
 # reproduced to ~5% iff smashed activations/gradients travel INT8-quantized
 # (1 byte/float) while parameters travel fp32, gamma_keep = 0.6, E = 1, and
-# |W| includes the pre-trained checkpoint's 21k-class head. These are the
-# implicit conventions we reverse-engineered; both raw-fp32 and calibrated
-# modes are supported via bytes_smashed.
+# |W| includes the pre-trained checkpoint's 21k-class head. That implicit
+# int8 wire format is now RUNNABLE, not just assumed: runtime/codec.py's
+# Int8Codec carries smashed activations and cut-layer gradients as actual
+# int8 payloads, the protocol's TrafficMeter counts the real bytes, and
+# benchmarks/comm_cost.py (--check) validates measured-vs-analytical to
+# within 5%. Set bytes_smashed from codec.bytes_per_float(shape) to make
+# this model the exact cross-check of a measured run.
 
 
 @dataclass
@@ -81,6 +85,29 @@ def sfprompt_comm(c: CostInputs) -> float:
     smashed = 4 * c.q * c.gamma_keep * c.D * c.E
     return (smashed * c.bytes_smashed
             + 2 * (c.Wt + c.p) * c.bytes_param) * c.K
+
+
+def sfprompt_comm_breakdown(c: CostInputs) -> Dict[str, float]:
+    """sfprompt_comm split by physical link, keyed like the TrafficMeter:
+    each cut point carries q floats forward + q backward per sample per
+    phase-2 pass; (tail + prompt) travel up + down once per round."""
+    per_boundary = 2 * c.q * c.gamma_keep * c.D * c.E * c.bytes_smashed * c.K
+    return {"head_body": per_boundary, "body_tail": per_boundary,
+            "params": 2 * (c.Wt + c.p) * c.bytes_param * c.K}
+
+
+def crosscheck(measured: Dict[str, float], c: CostInputs) -> Dict[str, Dict]:
+    """Measured TrafficMeter bytes vs the analytical model, per link.
+    Returns {link: {measured, analytical, err_pct}}."""
+    analytical = sfprompt_comm_breakdown(c)
+    out = {}
+    for name, ref in analytical.items():
+        if name not in measured:
+            continue
+        got = measured[name]
+        out[name] = {"measured": got, "analytical": ref,
+                     "err_pct": 100.0 * (got - ref) / max(ref, 1e-12)}
+    return out
 
 
 # --------------------------------------------------------- client compute

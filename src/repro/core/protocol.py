@@ -28,8 +28,11 @@ from repro.core.aggregation import broadcast_to_clients, fedavg
 from repro.core.local_update import local_epochs, local_loss_fn
 from repro.core.split import SplitModel
 from repro.optim import Optimizer, adamw, apply_updates, sgd
+from repro.runtime.meter import TrafficMeter
 
 Params = Dict[str, Any]
+
+WIRE_SEED = 23   # base PRNG stream for stochastic wire rounding
 
 
 @dataclass(frozen=True)
@@ -59,6 +62,7 @@ class SFPromptTrainer:
         self.pcfg = pcfg
         self.opt_local = make_optimizer(pcfg, pcfg.lr_local)
         self.opt_split = make_optimizer(pcfg, pcfg.lr_split)
+        self.meter = TrafficMeter()   # measured bytes across rounds
         self._round_jit = jax.jit(self._round)
         self._eval_jit = jax.jit(self._eval_batches)
 
@@ -68,17 +72,26 @@ class SFPromptTrainer:
                 "round": jnp.zeros((), jnp.int32)}
 
     # ------------------------------------------------------------- phase 2
-    def _split_loss(self, params_frozen, trainable, batch):
+    def _split_loss(self, params_frozen, trainable, batch, wire_key):
+        """Phase-2 loss with the head->body and body->tail hops crossing the
+        real wire: codec'd forward activations, codec'd backward gradients
+        (via the boundary custom-VJP), measured bytes in the aux."""
         model, pcfg = self.model, self.pcfg
+        k_hb, k_bt = jax.random.split(wire_key)
         ho = model.head_fwd(params_frozen["head"], trainable["prompt"], batch,
                             mode="train", impl=pcfg.impl)
-        bo = model.body_fwd(params_frozen["body"], ho["smashed"], ho)
-        to = model.tail_fwd(trainable["tail"], bo["smashed"], ho, batch)
+        x_hb, b_hb = model.wire.head_body.transmit(
+            ho["smashed"], key=k_hb, train=True)
+        bo = model.body_fwd(params_frozen["body"], x_hb, ho)
+        x_bt, b_bt = model.wire.body_tail.transmit(
+            bo["smashed"], key=k_bt, train=True)
+        to = model.tail_fwd(trainable["tail"], x_bt, ho, batch)
         out = {"logits": to["logits"], "n_prefix": to.get("n_prefix", 0),
                "aux": ho["aux"] + bo["aux"] + to["aux"]}
-        return losses.task_loss(model.cfg, out, batch, impl=pcfg.impl)
+        loss, _ = losses.task_loss(model.cfg, out, batch, impl=pcfg.impl)
+        return loss, {"wire": {"head_body": b_hb, "body_tail": b_bt}}
 
-    def _split_epochs(self, frozen, trainable, opt_state, data):
+    def _split_epochs(self, frozen, trainable, opt_state, data, wire_key):
         pcfg = self.pcfg
         n = jax.tree.leaves(data)[0].shape[0]
         nb = max(1, n // pcfg.batch_size)
@@ -86,23 +99,29 @@ class SFPromptTrainer:
             lambda x: x[: nb * pcfg.batch_size].reshape(
                 (nb, pcfg.batch_size) + x.shape[1:]), data)
         grad_fn = jax.value_and_grad(
-            lambda tr, b: self._split_loss(frozen, tr, b)[0])
+            lambda tr, b, k: self._split_loss(frozen, tr, b, k),
+            has_aux=True)
 
         def one_batch(carry, batch):
-            tr, os, acc = carry
-            loss, grads = grad_fn(tr, batch)
+            tr, os, acc, wire, step = carry
+            (loss, aux), grads = grad_fn(
+                tr, batch, jax.random.fold_in(wire_key, step))
             updates, os = self.opt_split.update(grads, os, tr)
             tr = apply_updates(tr, updates)
-            return (tr, os, acc + loss), None
+            wire = jax.tree.map(jnp.add, wire, aux["wire"])
+            return (tr, os, acc + loss, wire, step + 1), None
 
         def one_epoch(carry, _):
             carry, _ = jax.lax.scan(one_batch, carry, batched)
             return carry, None
 
-        (trainable, opt_state, acc), _ = jax.lax.scan(
-            one_epoch, (trainable, opt_state, jnp.float32(0.0)),
+        wire0 = {"head_body": jnp.float32(0.0),
+                 "body_tail": jnp.float32(0.0)}
+        (trainable, opt_state, acc, wire, _), _ = jax.lax.scan(
+            one_epoch,
+            (trainable, opt_state, jnp.float32(0.0), wire0, jnp.int32(0)),
             None, length=pcfg.split_epochs)
-        return trainable, opt_state, acc / (pcfg.split_epochs * nb)
+        return trainable, opt_state, acc / (pcfg.split_epochs * nb), wire
 
     # ------------------------------------------------------------- round
     def _round(self, state: Params, client_data) -> Tuple[Params, Dict]:
@@ -163,13 +182,18 @@ class SFPromptTrainer:
         opt_state = jax.vmap(self.opt_split.init)(trainable)
         frozen_k = broadcast_to_clients(
             {"head": params["head"], "body": params["body"]}, K)
+        wire_keys = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(WIRE_SEED),
+                               state["round"]), K)
 
-        def split_one(fz, tr, os, d):
-            return self._split_epochs(fz, tr, os, d)
+        def split_one(fz, tr, os, d, wk):
+            return self._split_epochs(fz, tr, os, d, wk)
 
-        trainable, opt_state, split_loss = jax.vmap(split_one)(
-            frozen_k, trainable, opt_state, pruned)
+        trainable, opt_state, split_loss, wire = jax.vmap(split_one)(
+            frozen_k, trainable, opt_state, pruned, wire_keys)
         metrics["split_loss"] = split_loss.mean()
+        for name, per_client in wire.items():
+            metrics[f"wire/{name}_bytes"] = per_client.sum()
 
         # ---- Phase 3: weighted FedAvg of (tail, prompt)
         weights = jnp.full((K,), keep, jnp.float32)
@@ -177,12 +201,21 @@ class SFPromptTrainer:
         new_params = dict(params)
         new_params["tail"] = agg["tail"]
         new_params["prompt"] = agg["prompt"]
+        # (tail, prompt) travel client->server and back once per round
+        metrics["wire/params_bytes"] = jnp.float32(2 * K * sum(
+            x.size * x.dtype.itemsize
+            for x in jax.tree.leaves({"tail": params["tail"],
+                                      "prompt": params["prompt"]})))
 
         return ({"params": new_params, "round": state["round"] + 1}, metrics)
 
     def round(self, state: Params, client_data) -> Tuple[Params, Dict]:
         state, metrics = self._round_jit(state, client_data)
-        return state, {k: float(v) for k, v in metrics.items()}
+        metrics = {k: float(v) for k, v in metrics.items()}
+        self.meter.absorb({k.removeprefix("wire/").removesuffix("_bytes"): v
+                           for k, v in metrics.items()
+                           if k.startswith("wire/")})
+        return state, metrics
 
     # ------------------------------------------------------------- eval
     def _eval_batches(self, params, batched):

@@ -6,6 +6,13 @@ lives on the SERVER. Split points land on layer-pattern cycle boundaries so
 every segment scans homogeneously. Per the paper the split is dynamic —
 `SplitConfig.head_cycles/tail_cycles` choose it per deployment.
 
+The head->body and body->tail cut points are real wire boundaries: a
+`runtime.boundary.WireSpec` (default raw fp32) owns a codec per link, and
+`forward(route="split")` pushes every smashed activation — and, via the
+codec's custom VJP, every cut-layer gradient — through it, reporting the
+measured bytes in `out["wire_bytes"]`. See ARCHITECTURE.md §Segment
+pipeline.
+
 Segment placement notes (DESIGN.md §Arch-applicability):
   - deepseek-v3: the 3 dense prefix layers belong to the head.
   - whisper: the (stubbed-frontend) encoder is client-side feature
@@ -28,6 +35,7 @@ from repro.models.config import ModelConfig
 from repro.models.transformer import (apply_block, init_block,
                                       init_block_cache, init_stack, run_stack,
                                       stack_cache)
+from repro.runtime.boundary import WireSpec
 
 Params = Dict[str, Any]
 
@@ -43,7 +51,8 @@ class SplitConfig:
 
 
 class SplitModel:
-    def __init__(self, cfg: ModelConfig, split: SplitConfig):
+    def __init__(self, cfg: ModelConfig, split: SplitConfig,
+                 wire: Optional[WireSpec] = None):
         if split.head_cycles + split.tail_cycles >= cfg.n_cycles:
             raise ValueError(
                 f"{cfg.name}: head({split.head_cycles}) + tail"
@@ -51,6 +60,9 @@ class SplitModel:
                 f" out of {cfg.n_cycles}")
         self.cfg = cfg
         self.split = split
+        # The two physical links of the split; route="split" traffic always
+        # crosses them (route="local" is client-only, zero wire traffic).
+        self.wire = wire if wire is not None else WireSpec.make("fp32")
         self.body_cycles = cfg.n_cycles - split.head_cycles - split.tail_cycles
         cyc = len(cfg.layer_pattern)
         self.n_head_layers = cfg.n_dense_layers + split.head_cycles * cyc
@@ -332,8 +344,10 @@ class SplitModel:
     # -------------------------------------------------------------- routes
     def forward(self, params, batch, *, route="split", mode="train",
                 cache=None, impl="ref", dtype=jnp.float32, remat=False,
-                unroll=False, prompt=None, last_only=True):
-        """route='split': head -> body -> tail (phases 2).
+                unroll=False, prompt=None, last_only=True, wire_key=None):
+        """route='split': head -> body -> tail (phase 2), every smashed
+        tensor crossing the head_body / body_tail wire boundaries through
+        their codecs; out['wire_bytes'] holds the measured bytes per link.
         route='local': head -> tail directly (phase 1 local-loss update and
         EL2N scoring — the body is skipped, zero server communication)."""
         prompt = params["prompt"] if prompt is None else prompt
@@ -343,18 +357,28 @@ class SplitModel:
                            unroll=unroll)
         x, aux = ho["smashed"], ho["aux"]
         new_cache = {"head": ho["cache"]} if cache is not None else None
+        wire_bytes = {}
+        train = mode == "train"
         if route == "split":
+            k_hb = k_bt = None
+            if wire_key is not None:
+                k_hb, k_bt = jax.random.split(wire_key)
+            x, wire_bytes["head_body"] = self.wire.head_body.transmit(
+                x, key=k_hb, train=train)
             bo = self.body_fwd(params["body"], x, ho,
                                cache=cache["body"] if cache else None)
             x = bo["smashed"]
             aux += bo["aux"]
             if cache is not None:
                 new_cache["body"] = bo["cache"]
+            x, wire_bytes["body_tail"] = self.wire.body_tail.transmit(
+                x, key=k_bt, train=train)
         to = self.tail_fwd(params["tail"], x, ho, batch,
                            cache=cache["tail"] if cache else None,
                            last_only=(mode == "prefill" and last_only))
         out = dict(to)
         out["aux"] = aux + to["aux"]
+        out["wire_bytes"] = wire_bytes
         if cache is not None:
             new_cache["tail"] = to["cache"]
             out["cache"] = new_cache

@@ -10,4 +10,16 @@ Kernels:
   el2n            — fused EL2N score + CE over vocab tiles (paper's pruning hot-spot)
   rwkv6_scan      — RWKV-6 data-dependent-decay recurrence, chunked (GLA form)
   mamba2_scan     — Mamba-2 SSD chunked scan (matmul form for the MXU)
+  quant           — int8 stochastic quantize/dequantize for the wire codecs
 """
+from jax.experimental.pallas import tpu as _pltpu
+
+# The TPU compiler-params dataclass was renamed across JAX releases
+# (TPUCompilerParams <-> CompilerParams). Resolve whichever this JAX has.
+_COMPILER_PARAMS_CLS = getattr(_pltpu, "CompilerParams", None) or getattr(
+    _pltpu, "TPUCompilerParams")
+
+
+def compiler_params(**kwargs):
+    """Version-compatible constructor for pltpu compiler params."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

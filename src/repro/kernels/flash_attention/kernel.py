@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compiler_params
+
 MASK_VALUE = -2.0 ** 30
 LANES = 128
 
@@ -137,7 +139,7 @@ def flash_attention_fwd(
             pltpu.VMEM((block_q, LANES), jnp.float32),   # l
             pltpu.VMEM((block_q, Dv), jnp.float32),      # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="sfprompt_flash_attention",

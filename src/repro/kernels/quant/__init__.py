@@ -1,0 +1,1 @@
+from repro.kernels.quant.ops import dequantize_int8, quantize_int8  # noqa: F401

@@ -1,0 +1,59 @@
+"""Public int8 wire quantize/dequantize ops with impl dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant import ref
+from repro.kernels.quant.kernel import LANES, dequantize_fwd, quantize_fwd
+
+
+def _resolve(impl: str) -> str:
+    if impl in ("auto", "analysis"):
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def _block_n(N: int, want: int = 256) -> int:
+    return next(b for b in (want, 128, 64, 32, 16, 8, 4, 2, 1) if N % b == 0)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def quantize_int8(x: jnp.ndarray, u: jnp.ndarray, *, impl: str = "auto"):
+    """Row-wise symmetric int8 quantization with stochastic rounding.
+
+    x: (N, D) float; u: uniform noise in [0,1) broadcastable to (N, D)
+    (pass 0.5 for deterministic round-to-nearest).
+    Returns (values (N, D) int8, scales (N, 1) f32).
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.quantize(x, u)
+    N, D = x.shape
+    u = jnp.broadcast_to(jnp.asarray(u, jnp.float32), x.shape)
+    padd = (-D) % LANES
+    if padd:
+        x = jnp.pad(x, ((0, 0), (0, padd)))
+        u = jnp.pad(u, ((0, 0), (0, padd)))
+    values, scales = quantize_fwd(x, u, block_n=_block_n(N),
+                                  interpret=(impl == "interpret"))
+    return values[:, :D], scales[:, :1]
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "dtype"))
+def dequantize_int8(values: jnp.ndarray, scales: jnp.ndarray, *,
+                    dtype=jnp.float32, impl: str = "auto"):
+    """values (N, D) int8, scales (N, 1) f32 -> (N, D) dtype."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.dequantize(values, scales, dtype)
+    N, D = values.shape
+    padd = (-D) % LANES
+    if padd:
+        values = jnp.pad(values, ((0, 0), (0, padd)))
+    scales = jnp.broadcast_to(scales.astype(jnp.float32), (N, LANES))
+    out = dequantize_fwd(values, scales, dtype=dtype, block_n=_block_n(N),
+                         interpret=(impl == "interpret"))
+    return out[:, :D]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the int8 wire quantizer.
+
+Per-row symmetric quantization over the last axis (one fp32 scale per
+token-row of the smashed activation):
+
+    scale = max|x_row| / 127          (clamped away from zero)
+    q     = clip(floor(x/scale + u), -127, 127)   as int8
+
+`u` is uniform noise in [0, 1): stochastic rounding (unbiased,
+E[dequant(q)] = x).  `u = 0.5` reduces to round-to-nearest — the
+deterministic mode used for eval/serving.  Dequantization is q * scale.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-8
+QMAX = 127.0
+
+
+def quantize(x: jnp.ndarray, u) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x (..., D) float; u broadcastable to x.shape in [0, 1).
+    Returns (values int8 (..., D), scales f32 (..., 1))."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scales = jnp.maximum(amax / QMAX, EPS)
+    q = jnp.floor(xf / scales + jnp.asarray(u, jnp.float32))
+    values = jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+    return values, scales
+
+
+def dequantize(values: jnp.ndarray, scales: jnp.ndarray,
+               dtype=jnp.float32) -> jnp.ndarray:
+    return (values.astype(jnp.float32) * scales).astype(dtype)

@@ -2,8 +2,12 @@
 dry-runs): continuous prefill + decode against a shared KV cache, with the
 aggregated fine-tuned (tail, prompt).
 
+Serving crosses the same head->body / body->tail wire boundaries as
+training: pick the codec with --wire (fp32 | bf16 | int8) and the loop
+reports the measured smashed-tensor traffic next to the token rate.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --reduced \\
-      --requests 8 --new-tokens 32
+      --requests 8 --new-tokens 32 --wire int8
 """
 from __future__ import annotations
 
@@ -17,6 +21,8 @@ from repro.checkpoint import load_checkpoint
 from repro.configs import get_config
 from repro.core import SplitConfig, SplitModel
 from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.runtime import TrafficMeter, WireSpec
+from repro.runtime.meter import MB
 
 
 def main():
@@ -29,20 +35,25 @@ def main():
     ap.add_argument("--window", type=int, default=None)
     ap.add_argument("--params", default=None, help="checkpoint to serve")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--wire", default="fp32", choices=("fp32", "bf16", "int8"),
+                    help="codec for the smashed tensors on both boundaries")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
-        cfg = cfg.reduced()
+        # at least 3 layer-pattern cycles so head/body/tail are all non-empty
+        cfg = cfg.reduced(n_layers=3 * len(cfg.layer_pattern))
     split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=4)
-    model = SplitModel(cfg, split)
+    wire = WireSpec.make(args.wire)
+    model = SplitModel(cfg, split, wire)
     params = model.init(jax.random.PRNGKey(0))
     if args.params:
         loaded = load_checkpoint(args.params)
         params = jax.tree.map(jnp.asarray, loaded)
 
-    prefill = jax.jit(make_prefill_step(model))
-    decode = jax.jit(make_decode_step(model))
+    prefill = jax.jit(make_prefill_step(model, with_wire_bytes=True))
+    decode = jax.jit(make_decode_step(model, with_wire_bytes=True))
+    meter = TrafficMeter()
     B = args.requests
     total = args.prompt_tokens + args.new_tokens + split.prompt_len
     cache = model.init_cache(B, seq_len=total, window=args.window)
@@ -57,9 +68,10 @@ def main():
             jax.random.PRNGKey(2), (B, cfg.encoder.n_frames, cfg.d_model))
 
     t0 = time.time()
-    logits, cache = prefill(params, batch, cache)
+    logits, cache, wb = prefill(params, batch, cache)
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     t_pre = time.time() - t0
+    meter.absorb(wb)
     extra = split.prompt_len + (8 if cfg.arch_type == "vlm" else 0)
 
     key = jax.random.PRNGKey(7)
@@ -67,8 +79,9 @@ def main():
     n_out = 1
     for i in range(args.new_tokens - 1):
         pos = jnp.full((B,), args.prompt_tokens + extra + i, jnp.int32)
-        tok, logits, cache = decode(params, {"tokens": tok[:, None],
-                                             "pos": pos}, cache)
+        tok, logits, cache, wb = decode(params, {"tokens": tok[:, None],
+                                                 "pos": pos}, cache)
+        meter.absorb(wb)
         if args.temperature > 0:
             key, sub = jax.random.split(key)
             tok = jax.random.categorical(
@@ -77,6 +90,10 @@ def main():
     dt = time.time() - t0
     print(f"prefill: {B}x{args.prompt_tokens} in {t_pre:.2f}s | "
           f"decode: {B}x{n_out} in {dt:.2f}s = {B*n_out/dt:.1f} tok/s")
+    print(f"wire [{wire.describe()}]: "
+          f"{meter.total_bytes() / MB:.3f} MB smashed traffic "
+          f"({meter.totals['head_body'] / MB:.3f} head_body + "
+          f"{meter.totals['body_tail'] / MB:.3f} body_tail)")
 
 
 if __name__ == "__main__":

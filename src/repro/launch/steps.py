@@ -43,23 +43,32 @@ def _fused_lm_loss(hidden, head_w, tokens, n_prefix, softcap=None):
 
 def make_split_loss(model: SplitModel, *, impl="ref", remat=True,
                     loss_mode="logits", unroll=False):
+    """Phase-2 loss with both cut points crossing the model's wire
+    boundaries (codec'd activations forward, codec'd gradients backward).
+    `wire_key=None` uses deterministic round-to-nearest for stochastic
+    codecs — pass a key for unbiased stochastic rounding."""
     cfg = model.cfg
 
-    def split_loss(trainable, frozen, batch):
+    def split_loss(trainable, frozen, batch, wire_key=None):
+        k_hb = k_bt = None
+        if wire_key is not None:
+            k_hb, k_bt = jax.random.split(wire_key)
         ho = model.head_fwd(frozen["head"], trainable["prompt"], batch,
                             mode="train", impl=impl, dtype=ACT_DTYPE,
                             remat=remat, unroll=unroll)
-        bo = model.body_fwd(frozen["body"], ho["smashed"], ho)
+        x_hb, _ = model.wire.head_body.transmit(ho["smashed"], key=k_hb)
+        bo = model.body_fwd(frozen["body"], x_hb, ho)
+        x_bt, _ = model.wire.body_tail.transmit(bo["smashed"], key=k_bt)
         if loss_mode == "fused" and not cfg.num_classes:
             x, aux_t, _ = model._seg_fwd(
                 trainable["tail"], "tail", model.split.tail_cycles,
-                bo["smashed"], model._ctx_from(ho), None)
+                x_bt, model._ctx_from(ho), None)
             hidden = L.apply_norm(trainable["tail"]["final_norm"], x, cfg.norm)
             loss = _fused_lm_loss(hidden, trainable["tail"]["head"]["w"],
                                   batch["tokens"], ho["n_prefix"],
                                   cfg.final_logit_softcap)
             return loss + ho["aux"] + bo["aux"] + aux_t
-        to = model.tail_fwd(trainable["tail"], bo["smashed"], ho, batch)
+        to = model.tail_fwd(trainable["tail"], x_bt, ho, batch)
         out = {"logits": to["logits"].astype(jnp.float32),
                "n_prefix": to.get("n_prefix", 0),
                "aux": ho["aux"] + bo["aux"] + to["aux"]}
@@ -117,22 +126,28 @@ def make_train_step(model: SplitModel, *, n_clients: int,
 
 
 def make_prefill_step(model: SplitModel, *, impl: str = "ref",
-                      unroll: bool = False):
+                      unroll: bool = False, with_wire_bytes: bool = False):
+    """Prefill crosses both wire boundaries once (forward only); with
+    `with_wire_bytes` the step also returns the measured per-link bytes."""
     def prefill_step(params, batch, cache):
         out = model.forward(params, batch, route="split", mode="prefill",
                             cache=cache, impl=impl, dtype=ACT_DTYPE,
                             unroll=unroll)
+        if with_wire_bytes:
+            return out["logits"][:, -1, :], out["cache"], out["wire_bytes"]
         return out["logits"][:, -1, :], out["cache"]
     return prefill_step
 
 
 def make_decode_step(model: SplitModel, *, impl: str = "ref",
-                     unroll: bool = False):
+                     unroll: bool = False, with_wire_bytes: bool = False):
     def decode_step(params, batch, cache):
         out = model.forward(params, batch, route="split", mode="decode",
                             cache=cache, impl=impl, dtype=ACT_DTYPE,
                             unroll=unroll)
         logits = out["logits"][:, 0, :]
         next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        if with_wire_bytes:
+            return next_tok, logits, out["cache"], out["wire_bytes"]
         return next_tok, logits, out["cache"]
     return decode_step

@@ -1,0 +1,20 @@
+"""Transport-aware segment pipeline: the split's wire boundaries as
+first-class objects.
+
+  codec.py    — WireCodec (fp32 | bf16 | int8-stochastic) + the custom-VJP
+                roundtrip that quantizes backward gradients too
+  boundary.py — Boundary / WireSpec: the head->body and body->tail links
+  meter.py    — TrafficMeter: measured bytes per boundary per round
+  hetero.py   — per-client SplitConfig groups (import directly to avoid a
+                core<->runtime import cycle at package load)
+
+This is the seam between the model segments (core/split.py) and everything
+that moves tensors between machines: phase-2 training (core/protocol.py),
+serving (launch/serve.py, launch/steps.py), and the analytical cost model
+cross-check (core/comm.py, benchmarks/comm_cost.py).
+"""
+from repro.runtime.boundary import (BOUNDARY_NAMES, Boundary,  # noqa: F401
+                                    WireSpec)
+from repro.runtime.codec import (CODECS, Bf16Codec, Fp32Codec,  # noqa: F401
+                                 Int8Codec, WireCodec, get_codec)
+from repro.runtime.meter import TrafficMeter  # noqa: F401

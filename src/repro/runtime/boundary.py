@@ -1,0 +1,77 @@
+"""Wire boundaries: the two physical links of the three-way split.
+
+    client ──(head_body)──> server ──(body_tail)──> client
+
+`Boundary.transmit` is THE function every smashed tensor crosses on its way
+between segments. It applies the codec roundtrip (with the custom VJP that
+also quantizes the backward gradient) and returns the exact byte count that
+hit the wire, as a traced scalar the protocol accumulates per round.
+
+`WireSpec` bundles the two boundaries; `SplitModel` owns one and routes
+`forward()` / phase-2 losses / serving through it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.codec import WireCodec, get_codec
+
+HEAD_BODY = "head_body"
+BODY_TAIL = "body_tail"
+BOUNDARY_NAMES = (HEAD_BODY, BODY_TAIL)
+
+
+@dataclass(frozen=True)
+class Boundary:
+    name: str
+    codec: WireCodec
+
+    def _noise(self, key, shape):
+        if key is None or not self.codec.stochastic:
+            # round-to-nearest: unbiased only in expectation per element,
+            # but deterministic — the eval/serving mode
+            half = jnp.full((), 0.5, jnp.float32)
+            return half, half
+        kf, kb = jax.random.split(key)
+        return (jax.random.uniform(kf, shape, jnp.float32),
+                jax.random.uniform(kb, shape, jnp.float32))
+
+    def transmit(self, x: jnp.ndarray, *, key=None,
+                 train: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Push `x` across this boundary. Returns (received tensor,
+        wire bytes as a traced f32 scalar). `train=True` counts the backward
+        gradient crossing too (same shape, same codec, opposite direction)."""
+        u_fwd, u_bwd = self._noise(key, x.shape)
+        y = self.codec.roundtrip(x, u_fwd, u_bwd)
+        nbytes = self.codec.payload_nbytes(x.shape) * (2 if train else 1)
+        return y, jnp.float32(nbytes)
+
+    def payload_nbytes(self, shape) -> int:
+        return self.codec.payload_nbytes(shape)
+
+
+@dataclass(frozen=True)
+class WireSpec:
+    """The split's two cut points with their codecs."""
+    head_body: Boundary
+    body_tail: Boundary
+
+    @classmethod
+    def make(cls, codec: str = "fp32", *, impl: str = "auto",
+             body_tail_codec: Optional[str] = None) -> "WireSpec":
+        c_hb = get_codec(codec, impl=impl)
+        c_bt = get_codec(body_tail_codec or codec, impl=impl)
+        return cls(head_body=Boundary(HEAD_BODY, c_hb),
+                   body_tail=Boundary(BODY_TAIL, c_bt))
+
+    @property
+    def boundaries(self) -> Tuple[Boundary, Boundary]:
+        return (self.head_body, self.body_tail)
+
+    def describe(self) -> str:
+        return (f"{HEAD_BODY}:{self.head_body.codec.name} "
+                f"{BODY_TAIL}:{self.body_tail.codec.name}")

@@ -1,0 +1,171 @@
+"""Wire codecs: what a smashed tensor looks like as bytes on the link.
+
+A `WireCodec` maps an activation (or cut-layer gradient) to the payload that
+actually crosses the client<->server boundary and back:
+
+    payload = encode(x, u)        # the bytes on the wire
+    y       = decode(payload, dt) # what the receiving segment computes on
+
+`payload_nbytes(shape)` is the exact serialized size of that payload — the
+TrafficMeter counts it, and benchmarks/comm_cost.py cross-checks it against
+the analytical Table-1 model.
+
+`roundtrip(x, u_fwd, u_bwd)` is the autodiff-correct wire crossing: the
+forward value goes through encode/decode, and the custom VJP pushes the
+backward gradient through the SAME codec (with independent noise), so
+phase-2 training sees exactly the int8 wire a physical deployment would —
+quantized activations forward, quantized gradients backward (FedPrompt-style
+payload quantization, arXiv:2208.12268).
+
+Stochastic rounding noise `u` is uniform in [0, 1); `u = 0.5` degenerates to
+round-to-nearest (the deterministic eval/serving mode).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant.ops import dequantize_int8, quantize_int8
+
+Payload = Any
+
+
+class WireCodec:
+    """Base contract. Codecs are stateless and hashable (static under jit)."""
+
+    name: str = "identity"
+    stochastic: bool = False   # does encode consume rounding noise?
+
+    def __init__(self, impl: str = "auto"):
+        self.impl = impl       # ref | pallas | interpret | auto (codecs
+                               # without a kernel ignore it)
+
+    def encode(self, x: jnp.ndarray, u) -> Payload:
+        raise NotImplementedError
+
+    def decode(self, payload: Payload, dtype) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def payload_nbytes(self, shape: Tuple[int, ...]) -> int:
+        """Exact wire bytes for one tensor of `shape`."""
+        raise NotImplementedError
+
+    def bytes_per_float(self, shape: Tuple[int, ...]) -> float:
+        """Effective bytes per element incl. side-channel (scales) overhead —
+        plugs straight into comm.CostInputs.bytes_smashed."""
+        return self.payload_nbytes(shape) / max(1, math.prod(shape))
+
+    def roundtrip(self, x: jnp.ndarray, u_fwd, u_bwd) -> jnp.ndarray:
+        return _wire_roundtrip(self, x, jnp.asarray(u_fwd, jnp.float32),
+                               jnp.asarray(u_bwd, jnp.float32))
+
+    def __repr__(self):
+        return f"{type(self).__name__}({self.name})"
+
+    # static-hashability so codecs can ride in jit-static args
+    def __hash__(self):
+        return hash((type(self), self.name))
+
+    def __eq__(self, other):
+        return type(self) is type(other)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _wire_roundtrip(codec: WireCodec, x, u_fwd, u_bwd):
+    return codec.decode(codec.encode(x, u_fwd), x.dtype)
+
+
+def _wire_roundtrip_fwd(codec, x, u_fwd, u_bwd):
+    y = codec.decode(codec.encode(x, u_fwd), x.dtype)
+    return y, (u_fwd, u_bwd)
+
+
+def _wire_roundtrip_bwd(codec, res, g):
+    u_fwd, u_bwd = res
+    # the gradient crosses the same physical link: encode/decode it too
+    gq = codec.decode(codec.encode(g, u_bwd), g.dtype)
+    return gq, jnp.zeros_like(u_fwd), jnp.zeros_like(u_bwd)
+
+
+_wire_roundtrip.defvjp(_wire_roundtrip_fwd, _wire_roundtrip_bwd)
+
+
+class Fp32Codec(WireCodec):
+    """Raw fp32 on the wire — the paper-naive baseline."""
+
+    name = "fp32"
+
+    def encode(self, x, u):
+        return x.astype(jnp.float32)
+
+    def decode(self, payload, dtype):
+        return payload.astype(dtype)
+
+    def payload_nbytes(self, shape):
+        return 4 * math.prod(shape)
+
+
+class Bf16Codec(WireCodec):
+    """bf16 truncation: 2 bytes/float, exact exponent, 8-bit mantissa."""
+
+    name = "bf16"
+
+    def encode(self, x, u):
+        return x.astype(jnp.bfloat16)
+
+    def decode(self, payload, dtype):
+        return payload.astype(dtype)
+
+    def payload_nbytes(self, shape):
+        return 2 * math.prod(shape)
+
+
+class Int8Codec(WireCodec):
+    """Per-token-row symmetric int8 with stochastic rounding.
+
+    Payload = int8 values (1 B/elem) + one fp32 scale per row of the last
+    axis. The quantize/dequantize pair runs as a Pallas kernel on TPU
+    (kernels/quant/) with the pure-jnp ref elsewhere.
+    """
+
+    name = "int8"
+    stochastic = True
+
+    def encode(self, x, u):
+        D = x.shape[-1]
+        x2 = x.reshape(-1, D)
+        u2 = jnp.broadcast_to(jnp.asarray(u, jnp.float32), x.shape
+                              ).reshape(-1, D)
+        values, scales = quantize_int8(x2, u2, impl=self.impl)
+        return values.reshape(x.shape), scales.reshape(x.shape[:-1] + (1,))
+
+    def decode(self, payload, dtype):
+        values, scales = payload
+        D = values.shape[-1]
+        out = dequantize_int8(values.reshape(-1, D),
+                              scales.reshape(-1, 1), dtype=dtype,
+                              impl=self.impl)
+        return out.reshape(values.shape)
+
+    def payload_nbytes(self, shape):
+        n_rows = math.prod(shape[:-1]) if len(shape) > 1 else 1
+        return math.prod(shape) + 4 * n_rows
+
+    def __hash__(self):
+        return hash((type(self), self.name, self.impl))
+
+    def __eq__(self, other):
+        return type(self) is type(other) and self.impl == other.impl
+
+
+CODECS = {"fp32": Fp32Codec, "bf16": Bf16Codec, "int8": Int8Codec}
+
+
+def get_codec(name: str, **kw) -> WireCodec:
+    if name not in CODECS:
+        raise ValueError(f"unknown wire codec {name!r}; have {list(CODECS)}")
+    return CODECS[name](**kw)

@@ -1,0 +1,104 @@
+"""Per-client split heterogeneity: different cut points in one round.
+
+Resource-limited fleets are not uniform — a phone holds one transformer
+cycle per client segment, a workstation three. `ClientPlan` groups clients
+by their `SplitConfig`; each group trains through its own `SplitModel`
+(same backbone config, different head/tail cycle counts, same wire codecs),
+and the round ends with a cross-group FedAvg of the soft prompt — the one
+trainable tensor whose shape is split-invariant. Tails stay personalized
+per group (their layer counts differ), in the style of flexible
+personalized split FL (Yuan et al., arXiv:2508.10349).
+
+Wire traffic from every group lands in one shared `TrafficMeter`, so the
+comm accounting stays honest under heterogeneity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.protocol import ProtocolConfig, SFPromptTrainer
+from repro.core.split import SplitConfig, SplitModel
+from repro.models.config import ModelConfig
+from repro.runtime.boundary import WireSpec
+from repro.runtime.meter import TrafficMeter
+
+
+@dataclass(frozen=True)
+class ClientPlan:
+    """One homogeneous group: `n_clients` devices sharing a cut point."""
+    split: SplitConfig
+    n_clients: int
+    name: str = ""
+
+
+class HeteroSFPromptTrainer:
+    """Runs one SFPrompt round across groups with different cut points."""
+
+    def __init__(self, cfg: ModelConfig, plans: Sequence[ClientPlan],
+                 pcfg: ProtocolConfig, wire: Optional[WireSpec] = None):
+        if not plans:
+            raise ValueError("need at least one ClientPlan")
+        p_lens = {p.split.prompt_len for p in plans}
+        if len(p_lens) != 1:
+            raise ValueError(
+                f"prompt_len must match across plans for cross-group "
+                f"aggregation; got {sorted(p_lens)}")
+        self.cfg = cfg
+        self.plans = list(plans)
+        self.trainers: List[SFPromptTrainer] = [
+            SFPromptTrainer(SplitModel(cfg, p.split, wire), pcfg)
+            for p in plans]
+        self.meter = TrafficMeter()
+
+    # ------------------------------------------------------------- state
+    def init(self, key) -> List[Dict]:
+        return [t.init(jax.random.fold_in(key, i))
+                for i, t in enumerate(self.trainers)]
+
+    # ------------------------------------------------------------- round
+    def round(self, states: List[Dict],
+              group_data: Sequence) -> Tuple[List[Dict], Dict]:
+        """group_data[i]: pytree with leading (plans[i].n_clients, n, ...)
+        axes. Returns (new per-group states with the globally-averaged
+        prompt written back, merged metrics)."""
+        new_states, metrics = [], {}
+        wire_totals: Dict[str, float] = {}
+        for i, (tr, st, data) in enumerate(
+                zip(self.trainers, states, group_data)):
+            st, m = tr.round(st, data)
+            new_states.append(st)
+            tag = self.plans[i].name or f"g{i}"
+            for k, v in m.items():
+                if k.startswith("wire/"):
+                    wire_totals[k] = wire_totals.get(k, 0.0) + v
+                metrics[f"{tag}/{k}"] = v
+
+        # cross-group prompt FedAvg (client-count weighted); tails stay
+        # personalized per group — their shapes differ across cut points
+        w = jnp.asarray([p.n_clients for p in self.plans], jnp.float32)
+        w = w / w.sum()
+        prompt = sum(wi * st["params"]["prompt"]
+                     for wi, st in zip(w, new_states))
+        for st in new_states:
+            st["params"] = dict(st["params"], prompt=prompt)
+
+        metrics.update(wire_totals)
+        self.meter.absorb({k.removeprefix("wire/").removesuffix("_bytes"): v
+                           for k, v in wire_totals.items()})
+        return new_states, metrics
+
+    # ------------------------------------------------------------- eval
+    def evaluate(self, states: List[Dict], data, *,
+                 batch_size: int = 32) -> Dict:
+        per_group = [t.evaluate(s["params"], data, batch_size=batch_size)
+                     for t, s in zip(self.trainers, states)]
+        w = [p.n_clients for p in self.plans]
+        tot = sum(w)
+        out = {k: sum(wi * g[k] for wi, g in zip(w, per_group)) / tot
+               for k in per_group[0]}
+        out["per_group"] = per_group
+        return out

@@ -1,0 +1,46 @@
+"""TrafficMeter: measured bytes per boundary per round.
+
+Byte counts originate in `Boundary.transmit` as traced f32 scalars (from
+the actual payload shapes that crossed the wire) and ride through the
+protocol's jit/scan carries; `absorb()` folds a round's counters into
+host-side Python floats, and `report()`/`as_dict()` pretty-print them —
+benchmarks/comm_cost.py compares them against the analytical model.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Mapping
+
+from repro.runtime.boundary import BOUNDARY_NAMES
+
+PARAMS = "params"   # phase-3 (tail, prompt) up+down traffic
+MB = 2 ** 20
+
+
+class TrafficMeter:
+    def __init__(self, names: Iterable[str] = BOUNDARY_NAMES + (PARAMS,)):
+        self.names = tuple(names)
+        self.totals: Dict[str, float] = {n: 0.0 for n in self.names}
+        self.rounds = 0
+
+    def absorb(self, counts: Mapping[str, float]) -> None:
+        """Fold one round's counters (traced scalars or floats) in."""
+        for name, v in counts.items():
+            if name in self.totals:
+                self.totals[name] += float(v)
+        self.rounds += 1
+
+    def total_bytes(self) -> float:
+        return sum(self.totals.values())
+
+    def as_dict(self) -> Dict[str, float]:
+        return dict(self.totals, total=self.total_bytes())
+
+    def per_round(self) -> Dict[str, float]:
+        r = max(1, self.rounds)
+        return {n: v / r for n, v in self.as_dict().items()}
+
+    def report(self) -> str:
+        lines = [f"wire traffic over {self.rounds} round(s):"]
+        for n, v in self.as_dict().items():
+            lines.append(f"  {n:>10}: {v / MB:10.3f} MB")
+        return "\n".join(lines)

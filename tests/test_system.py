@@ -20,21 +20,28 @@ KEY = jax.random.PRNGKey(0)
 
 
 def test_full_pipeline_improves_eval():
-    """Accuracy must not regress over rounds once the frozen backbone has
+    """Eval must improve over rounds once the frozen backbone has
     non-random features (mirrors the paper's pretrained-ViT setting by
-    warm-starting the backbone with a few centralized steps)."""
+    warm-starting the backbone with a few centralized steps).
+
+    Train/test/pretrain all slice ONE generative draw: the synthetic class
+    anchors are seed-dependent, so datasets drawn with different seeds have
+    different label functions and cross-seed eval is pure noise (the old
+    flake). The margin is a relative-CE check, robust to tiny-batch
+    accuracy quantization."""
     cfg = get_config("vit-base").reduced(n_layers=3, d_model=64, d_ff=128)
     split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=4,
                         prune_gamma=0.3, local_epochs=1)
     model = SplitModel(cfg, split)
-    data = synthetic_image_dataset(DATASETS["cifar10-syn"], 480, seed=0,
-                                   image_hw=32)
-    test = synthetic_image_dataset(DATASETS["cifar10-syn"], 96, seed=9,
-                                   image_hw=32)
+    full = synthetic_image_dataset(DATASETS["cifar10-syn"], 480 + 96 + 256,
+                                   seed=0, image_hw=32)
+    data = {k: v[:480] for k, v in full.items()}
+    test = {k: v[480:576] for k, v in full.items()}
+    pre = {k: v[576:] for k, v in full.items()}
     clients = iid_partition(data, 6, seed=0)
 
     pcfg = ProtocolConfig(clients_per_round=3, local_epochs=1, batch_size=8,
-                          lr_local=0.03, lr_split=0.03, momentum=0.0)
+                          lr_local=0.01, lr_split=0.01, momentum=0.0)
     tr = SFPromptTrainer(model, pcfg)
     state = tr.init(KEY)
 
@@ -54,8 +61,6 @@ def test_full_pipeline_improves_eval():
         upd, opt_state = opt.update(g, opt_state, params)
         return apply_updates(params, upd), opt_state
 
-    pre = synthetic_image_dataset(DATASETS["cifar10-syn"], 256, seed=5,
-                                  image_hw=32)
     for i in range(16):
         sl = slice((i * 16) % 256, (i * 16) % 256 + 16)
         batch = {k: jnp.asarray(v[sl]) for k, v in pre.items()}
@@ -69,8 +74,12 @@ def test_full_pipeline_improves_eval():
                  stack_clients(clients, idx).items()}
         state, _ = tr.round(state, batch)
     ev1 = tr.evaluate(state["params"], test, batch_size=32)
-    assert ev1["acc"] >= ev0["acc"] - 0.02  # no catastrophic drift
+    # robust relative-improvement: the rounds must cut CE by >= 10% and
+    # must not lose accuracy vs the warm start (one-sample slack on the
+    # 96-sample eval set for borderline flips)
     assert np.isfinite(ev1["ce"])
+    assert ev1["ce"] <= 0.9 * ev0["ce"], (ev0, ev1)
+    assert ev1["acc"] >= ev0["acc"] - 1.5 / 96, (ev0, ev1)
 
 
 def test_launch_train_step_cpu():
