@@ -1,0 +1,135 @@
+"""Benchmark-regression gate: fail CI when a kernel slows down >25%.
+
+Compares `benchmarks/results/kernel_microbench.json` (written by the bench
+job's `REPRO_BENCH_FAST=1 python benchmarks/run.py --only kernel_microbench`)
+against the committed baseline `BENCH_kernels.json` at the repo root.
+
+Two metric classes:
+  * ratio metrics ("...speedup") — machine-independent (fused vs naive on
+    the SAME host), so they gate by default: a speedup shrinking below
+    (1 - threshold) x baseline fails.
+  * absolute metrics ("..._us") — meaningful only on a pinned runner, so
+    they gate only under --strict; on shared CI runners the jitter and
+    hardware drift would make them pure noise.
+
+A kernel present in the results but absent from the baseline (or vice
+versa) is SKIPPED with a note, never failed — new kernels get a baseline
+via `--update`, which rewrites BENCH_kernels.json from the current results
+(run it on the reference machine, commit the diff).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(ROOT, "BENCH_kernels.json")
+DEFAULT_RESULTS = os.path.join(ROOT, "benchmarks", "results",
+                               "kernel_microbench.json")
+
+
+def flatten(results: Dict) -> Dict[str, float]:
+    """kernel_microbench.json -> flat {kernel/metric: value}, plus derived
+    speedup ratios for every (ref_us, <impl>_us) pair so the gate has a
+    machine-independent number per kernel."""
+    flat: Dict[str, float] = {}
+    for kernel, metrics in results.items():
+        if not isinstance(metrics, dict):
+            continue
+        for metric, value in metrics.items():
+            if isinstance(value, (int, float)):
+                flat[f"{kernel}/{metric}"] = float(value)
+        ref = metrics.get("ref_us")
+        if isinstance(ref, (int, float)):
+            for metric, value in metrics.items():
+                if (metric.endswith("_us") and metric != "ref_us"
+                        and isinstance(value, (int, float)) and value > 0):
+                    name = metric[: -len("_us")]
+                    flat[f"{kernel}/{name}_speedup"] = float(ref) / value
+    return flat
+
+
+def check(baseline: Dict[str, float], current: Dict[str, float], *,
+          threshold: float, strict: bool) -> int:
+    failures, checked, skipped = [], 0, []
+    for key, base in sorted(baseline.items()):
+        if key not in current:
+            skipped.append(f"{key} (no measurement this run)")
+            continue
+        cur = current[key]
+        is_ratio = key.endswith("speedup")
+        if not is_ratio and not strict:
+            continue   # absolute wall times gate only on pinned runners
+        checked += 1
+        if is_ratio:
+            floor = base * (1.0 - threshold)
+            ok = cur >= floor
+            detail = (f"{key}: {cur:.3f}x vs baseline {base:.3f}x "
+                      f"(floor {floor:.3f}x)")
+        else:
+            ceil = base * (1.0 + threshold)
+            ok = cur <= ceil
+            detail = (f"{key}: {cur:.1f}us vs baseline {base:.1f}us "
+                      f"(ceiling {ceil:.1f}us)")
+        print(("ok   " if ok else "FAIL ") + detail)
+        if not ok:
+            failures.append(key)
+    for key in sorted(set(current) - set(baseline)):
+        if key.endswith("speedup"):
+            skipped.append(f"{key} (no baseline — run --update to add)")
+    for note in skipped:
+        print(f"skip {note}")
+    if failures:
+        print(f"REGRESSION: {len(failures)} kernel metric(s) degraded "
+              f">{threshold:.0%}: {failures}")
+        return 1
+    print(f"OK: {checked} kernel metric(s) within {threshold:.0%} "
+          f"of baseline")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--results", default=DEFAULT_RESULTS)
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed fractional slowdown (default 0.25)")
+    ap.add_argument("--strict", action="store_true",
+                    help="also gate absolute _us wall times (pinned "
+                         "runners only)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current results")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.results):
+        print(f"skip: no benchmark results at {args.results} "
+              f"(run benchmarks/run.py --only kernel_microbench first)")
+        return 0
+    with open(args.results) as f:
+        current = flatten(json.load(f))
+
+    if args.update:
+        payload = {"kernels": current,
+                   "meta": {"source": os.path.relpath(args.results, ROOT),
+                            "threshold": args.threshold}}
+        with open(args.baseline, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.baseline} ({len(current)} metrics)")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"skip: no baseline at {args.baseline} — gate disabled "
+              f"(create one with --update)")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f).get("kernels", {})
+    return check(baseline, current, threshold=args.threshold,
+                 strict=args.strict)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,8 +27,8 @@ import sys
 
 from benchmarks.common import row, save
 from repro.configs import get_config
-from repro.core.comm import (CostInputs, cost_inputs_from, crosscheck,
-                             fl_comm, sfl_comm, sfprompt_comm)
+from repro.core.comm import (cost_inputs_from, crosscheck, fl_comm,
+                             measured_cost_inputs, sfl_comm, sfprompt_comm)
 from repro.core.split import SplitConfig
 
 PAPER = {
@@ -127,20 +127,8 @@ def measured_vs_analytical(lines=None, *, codec_name: str = "int8",
     # analytical inputs matched to what actually ran: 32x32 images -> 4
     # patches + CLS + prompts; pruning kept `keep` of n_local samples
     n_tokens = 1 + (32 // 16) ** 2
-    keep = max(batch, n_local - int(split.prune_gamma * n_local))
-    keep -= keep % batch
-    # segment sizes from the ACTUAL init (the analytic cfg.param_count()
-    # is the full-architecture closed form, not the reduced instance)
-    h, b, t = (model._segment_params_count(s) for s in ("head", "body",
-                                                        "tail"))
-    W = h + b + t
-    ci = CostInputs(W=W, alpha=h / W, tau=b / W,
-                    q=(n_tokens + split.prompt_len) * cfg.d_model,
-                    D=n_local, U=1, E=1, K=K,
-                    p=split.prompt_len * cfg.d_model,
-                    gamma_keep=keep / n_local)
-    ci.bytes_smashed = wire.head_body.codec.bytes_per_float(
-        (batch, n_tokens + split.prompt_len, cfg.d_model))
+    ci = measured_cost_inputs(model, tokens_per_sample=n_tokens,
+                              n_local=n_local, batch_size=batch, K=K)
     cc = crosscheck(tr.meter.totals, ci)
     for name, entry in cc.items():
         if lines is not None:

@@ -1,26 +1,25 @@
 """Paper Table 1: per-round latency model for FL / SFL / SFPrompt across
 link-rate and client-compute regimes. Demonstrates the paper's crossover
 claim: SFPrompt wins once |W| > 2*q*gamma/(alpha+tau) * |D| (large models,
-constrained links)."""
-from __future__ import annotations
+constrained links).
 
-import dataclasses
+The (R, P_C, P_S) regime constants live in `repro.fed.scheduler` — the same
+numbers drive the straggler simulation's per-client latency model, so the
+Table-1 analysis and the population engine cannot drift apart."""
+from __future__ import annotations
 
 from benchmarks.common import row, save
 from repro.configs import get_config
 from repro.core.comm import cost_inputs_from, summarize
 from repro.core.split import SplitConfig
+from repro.fed.scheduler import LINK_REGIMES
 
 
 def run():
     out, lines = {}, []
     split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=16,
                         prune_gamma=0.4)
-    regimes = {
-        "edge_wan": dict(R=12.5e6, P_C=5e12, P_S=500e12),     # 100 Mbps
-        "fiber": dict(R=125e6, P_C=5e12, P_S=500e12),         # 1 Gbps
-        "datacenter": dict(R=12.5e9, P_C=50e12, P_S=5000e12),
-    }
+    regimes = LINK_REGIMES
     for arch in ("vit-base", "vit-large", "stablelm-12b", "nemotron-4-340b"):
         cfg = get_config(arch)
         toks = 197 if cfg.arch_type == "vit" else 512

@@ -21,8 +21,6 @@ import os
 
 from benchmarks.common import RESULTS_DIR, row, save
 from repro.configs import get_config
-from repro.core.split import SplitConfig, SplitModel
-from repro.launch.dryrun import default_split_for
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 from repro.launch.specs import SHAPES
 

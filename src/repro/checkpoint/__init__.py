@@ -1,2 +1,3 @@
 from repro.checkpoint.io import (  # noqa: F401
-    latest_checkpoint, load_checkpoint, save_checkpoint)
+    all_checkpoints, latest_checkpoint, load_checkpoint, load_latest,
+    save_checkpoint)

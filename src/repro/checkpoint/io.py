@@ -39,11 +39,29 @@ def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
     return tree
 
 
-def save_checkpoint(path: str, tree: Any, *, step: Optional[int] = None) -> str:
+def save_checkpoint(path: str, tree: Any, *, step: Optional[int] = None,
+                    keep_last: Optional[int] = None) -> str:
+    """Write `tree` to npz. With `step`, writes ckpt_<step>.npz under
+    `path` ATOMICALLY (tmp + rename, so a kill mid-write never leaves a
+    truncated checkpoint for resume to trip on) and, with `keep_last`,
+    prunes all but the newest `keep_last` step files."""
+    if keep_last is not None:
+        if step is None:
+            raise ValueError("keep_last only applies to stepped "
+                             "checkpoints (pass step=)")
+        if keep_last < 1:
+            raise ValueError(f"keep_last must be >= 1, got {keep_last} "
+                             "(the checkpoint being written always stays)")
     if step is not None:
-        path = os.path.join(path, f"ckpt_{step:08d}.npz")
+        ckpt_dir, path = path, os.path.join(path, f"ckpt_{step:08d}.npz")
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path, **_flatten(tree))
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **_flatten(tree))
+    os.replace(tmp, path)
+    if step is not None and keep_last is not None:
+        for old in all_checkpoints(ckpt_dir)[:-keep_last]:
+            os.remove(old)
     return path
 
 
@@ -52,13 +70,23 @@ def load_checkpoint(path: str) -> Any:
         return _unflatten({k: z[k] for k in z.files})
 
 
-def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+def all_checkpoints(ckpt_dir: str) -> list:
+    """Step-ordered list of checkpoint paths in `ckpt_dir`."""
     if not os.path.isdir(ckpt_dir):
-        return None
+        return []
     pat = re.compile(r"ckpt_(\d+)\.npz$")
-    best, best_step = None, -1
-    for f in os.listdir(ckpt_dir):
-        m = pat.match(f)
-        if m and int(m.group(1)) > best_step:
-            best, best_step = os.path.join(ckpt_dir, f), int(m.group(1))
-    return best
+    found = [(int(m.group(1)), os.path.join(ckpt_dir, f))
+             for f in os.listdir(ckpt_dir) if (m := pat.match(f))]
+    return [p for _, p in sorted(found)]
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    ckpts = all_checkpoints(ckpt_dir)
+    return ckpts[-1] if ckpts else None
+
+
+def load_latest(ckpt_dir: str) -> Optional[Any]:
+    """Load the newest checkpoint in `ckpt_dir`, or None if there is none.
+    The resumable-training entry point: engines call this on restart."""
+    path = latest_checkpoint(ckpt_dir)
+    return None if path is None else load_checkpoint(path)

@@ -24,6 +24,29 @@ def fedavg(client_trees, weights: jnp.ndarray):
     return jax.tree.map(mean, client_trees)
 
 
+def fedavg_partial(client_trees, weights: jnp.ndarray, fallback):
+    """FedAvg over a PARTIALLY participating cohort (stragglers dropped or
+    down-weighted by the RoundScheduler).
+
+    weights: (K,) >= 0 — n_k * participation_k; clients at 0 (dropped) are
+    excluded and the mean renormalizes over the survivors, which is the
+    partial-participation-corrected FedAvg (the estimator stays unbiased
+    when the scheduler's drop process is client-independent). If EVERY
+    client dropped the round is lost and `fallback` (the pre-round global
+    params, no client axis) is returned unchanged — well-defined under jit.
+    """
+    w = weights.astype(jnp.float32)
+    total = w.sum()
+    safe = jnp.maximum(total, 1e-9)
+
+    def mean(x, fb):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        avg = (jnp.sum(wb * x.astype(jnp.float32), axis=0) / safe)
+        return jnp.where(total > 0, avg.astype(x.dtype), fb)
+
+    return jax.tree.map(mean, client_trees, fallback)
+
+
 def broadcast_to_clients(tree, k: int):
     """Replicate aggregated params back to K per-client copies."""
     return jax.tree.map(

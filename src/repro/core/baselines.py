@@ -16,7 +16,7 @@ subtrees receive gradients and in the cost-model entries (core/comm.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.core import losses
 from repro.core.aggregation import broadcast_to_clients, fedavg
 from repro.core.split import SplitModel
-from repro.optim import Optimizer, apply_updates, sgd
+from repro.optim import apply_updates, sgd
 
 Params = Dict[str, Any]
 

@@ -22,7 +22,7 @@ benchmarks/comm_cost.py; deviations recorded in EXPERIMENTS.md):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional
 
 from repro.core.split import SplitConfig, SplitModel
@@ -96,10 +96,33 @@ def sfprompt_comm_breakdown(c: CostInputs) -> Dict[str, float]:
             "params": 2 * (c.Wt + c.p) * c.bytes_param * c.K}
 
 
-def crosscheck(measured: Dict[str, float], c: CostInputs) -> Dict[str, Dict]:
+def sfprompt_comm_breakdown_partial(c: CostInputs, *, transmit_sum: float,
+                                    n_uploads: float,
+                                    k_down: Optional[float] = None,
+                                    ) -> Dict[str, float]:
+    """`sfprompt_comm_breakdown` corrected for a partially-participating
+    cohort (fed.RoundPlan): each boundary carries the per-client full
+    traffic times the sum of transmit fractions; (tail + prompt) go DOWN to
+    all `k_down` sampled clients but UP only from the `n_uploads` clients
+    that survived to aggregate. With transmit_sum = n_uploads = k_down = K
+    this reduces exactly to the synchronous breakdown."""
+    per_boundary_client = 2 * c.q * c.gamma_keep * c.D * c.E * c.bytes_smashed
+    params_each = (c.Wt + c.p) * c.bytes_param
+    k_down = c.K if k_down is None else k_down
+    return {"head_body": per_boundary_client * transmit_sum,
+            "body_tail": per_boundary_client * transmit_sum,
+            "params": params_each * (k_down + n_uploads)}
+
+
+def crosscheck(measured: Dict[str, float], c: CostInputs,
+               analytical: Optional[Dict[str, float]] = None,
+               ) -> Dict[str, Dict]:
     """Measured TrafficMeter bytes vs the analytical model, per link.
-    Returns {link: {measured, analytical, err_pct}}."""
-    analytical = sfprompt_comm_breakdown(c)
+    Returns {link: {measured, analytical, err_pct}}. Pass `analytical`
+    explicitly (e.g. `sfprompt_comm_breakdown_partial`) to check a
+    partial-participation round; default is the synchronous breakdown."""
+    if analytical is None:
+        analytical = sfprompt_comm_breakdown(c)
     out = {}
     for name, ref in analytical.items():
         if name not in measured:
@@ -171,6 +194,32 @@ def summarize(c: CostInputs) -> Dict[str, Dict[str, float]]:
 
 
 # --------------------------------------------------------- model binding
+def measured_cost_inputs(model: SplitModel, *, tokens_per_sample: int,
+                         n_local: int, batch_size: int, K: int,
+                         U: int = 1, E: int = 1) -> CostInputs:
+    """CostInputs matched to what an ACTUAL round of `model` runs, for
+    crosschecking a TrafficMeter: segment sizes from the real init (the
+    analytic `cfg.param_count()` is the full-architecture closed form, not
+    the reduced instance), pruning `keep` mirroring the protocol's
+    batch-multiple rounding, and bytes_smashed from the wire codec's real
+    payload. Shared by benchmarks/comm_cost.py --check and
+    tests/test_population.py so the two gates cannot drift apart."""
+    split, cfg = model.split, model.cfg
+    keep = max(batch_size, n_local - int(split.prune_gamma * n_local))
+    keep -= keep % batch_size
+    h, b, t = (model._segment_params_count(s)
+               for s in ("head", "body", "tail"))
+    W = h + b + t
+    ci = CostInputs(W=W, alpha=h / W, tau=b / W,
+                    q=(tokens_per_sample + split.prompt_len) * cfg.d_model,
+                    D=n_local, U=U, E=E, K=K,
+                    p=split.prompt_len * cfg.d_model,
+                    gamma_keep=keep / n_local)
+    ci.bytes_smashed = model.wire.head_body.codec.bytes_per_float(
+        (batch_size, tokens_per_sample + split.prompt_len, cfg.d_model))
+    return ci
+
+
 def cost_inputs_from(cfg: ModelConfig, split: SplitConfig, *,
                      tokens_per_sample: int, D: int, K: int = 5,
                      U: int = 10, E: int = 1, model: Optional[SplitModel] = None,

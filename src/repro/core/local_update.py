@@ -10,7 +10,7 @@ the protocol (head params broadcast, tail/prompt/opt-state per-client).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 from typing import Dict, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.el2n.ops import el2n_scores

@@ -16,7 +16,6 @@ on a mesh that axis shards over ('pod','data') — see launch/dryrun.py.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
@@ -24,8 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import losses, pruning
-from repro.core.aggregation import broadcast_to_clients, fedavg
-from repro.core.local_update import local_epochs, local_loss_fn
+from repro.core.aggregation import broadcast_to_clients, fedavg_partial
+from repro.core.local_update import local_epochs
 from repro.core.split import SplitModel
 from repro.optim import Optimizer, adamw, apply_updates, sgd
 from repro.runtime.meter import TrafficMeter
@@ -48,6 +47,9 @@ class ProtocolConfig:
     impl: str = "ref"
     use_pruning: bool = True
     use_local_loss: bool = True      # False => the Fig-6 ablation arm
+    return_client_trainable: bool = False
+    # ^ also return each client's post-round (tail, prompt) BEFORE FedAvg —
+    #   the fed engine stores these as personalized tails in the Population
 
 
 def make_optimizer(pcfg: ProtocolConfig, lr: float) -> Optimizer:
@@ -57,12 +59,16 @@ def make_optimizer(pcfg: ProtocolConfig, lr: float) -> Optimizer:
 
 
 class SFPromptTrainer:
+    supports_partial = True   # round() accepts a participation dict
+
     def __init__(self, model: SplitModel, pcfg: ProtocolConfig):
         self.model = model
         self.pcfg = pcfg
         self.opt_local = make_optimizer(pcfg, pcfg.lr_local)
         self.opt_split = make_optimizer(pcfg, pcfg.lr_split)
         self.meter = TrafficMeter()   # measured bytes across rounds
+        self.last_client_trainable = None   # per-client (tail, prompt) of
+        # the most recent round, populated iff pcfg.return_client_trainable
         self._round_jit = jax.jit(self._round)
         self._eval_jit = jax.jit(self._eval_batches)
 
@@ -124,8 +130,22 @@ class SFPromptTrainer:
         return trainable, opt_state, acc / (pcfg.split_epochs * nb), wire
 
     # ------------------------------------------------------------- round
-    def _round(self, state: Params, client_data) -> Tuple[Params, Dict]:
-        """client_data: pytree with leading (K, n_local, ...) axes."""
+    def _round(self, state: Params, client_data, participation,
+               init_tails) -> Tuple[Params, Dict, Dict]:
+        """client_data: pytree with leading (K, n_local, ...) axes — the
+        SAMPLED COHORT gathered from a (possibly huge) population, not the
+        population itself.
+
+        participation: {"transmit": (K,), "aggregate": (K,)} from a
+        `fed.RoundPlan` — transmit scales each client's measured wire bytes
+        (a straggler cut off mid-round only sent part of its traffic),
+        aggregate weights phase-3 FedAvg (0 drops the client). All-ones
+        reproduces the seed repo's synchronous full-participation round
+        byte-for-byte.
+
+        init_tails: optional K-stacked tail pytree — each client starts
+        phase 1 from its OWN tail (the fed engine's personalized-tail
+        regime) instead of the broadcast global tail; None broadcasts."""
         model, pcfg = self.model, self.pcfg
         params = state["params"]
         K = jax.tree.leaves(client_data)[0].shape[0]
@@ -133,6 +153,8 @@ class SFPromptTrainer:
 
         trainable = broadcast_to_clients(
             {"tail": params["tail"], "prompt": params["prompt"]}, K)
+        if init_tails is not None:
+            trainable = dict(trainable, tail=init_tails)
         metrics: Dict[str, Any] = {}
 
         # ---- Phase 1a: local-loss self-update (vmap over clients; head
@@ -192,29 +214,57 @@ class SFPromptTrainer:
         trainable, opt_state, split_loss, wire = jax.vmap(split_one)(
             frozen_k, trainable, opt_state, pruned, wire_keys)
         metrics["split_loss"] = split_loss.mean()
+        transmit = participation["transmit"].astype(jnp.float32)
         for name, per_client in wire.items():
-            metrics[f"wire/{name}_bytes"] = per_client.sum()
+            # a straggler that died / hit the deadline only sent a fraction
+            # of its phase-2 traffic — scale the measured per-client bytes
+            metrics[f"wire/{name}_bytes"] = (per_client * transmit).sum()
 
-        # ---- Phase 3: weighted FedAvg of (tail, prompt)
-        weights = jnp.full((K,), keep, jnp.float32)
-        agg = fedavg(trainable, weights)
+        # ---- Phase 3: participation-corrected weighted FedAvg of
+        # (tail, prompt); dropped clients are excluded, a fully-lost round
+        # falls back to the pre-round globals
+        aggregate = participation["aggregate"].astype(jnp.float32)
+        weights = jnp.float32(keep) * aggregate
+        agg = fedavg_partial(trainable, weights,
+                             {"tail": params["tail"],
+                              "prompt": params["prompt"]})
         new_params = dict(params)
         new_params["tail"] = agg["tail"]
         new_params["prompt"] = agg["prompt"]
-        # (tail, prompt) travel client->server and back once per round
-        metrics["wire/params_bytes"] = jnp.float32(2 * K * sum(
+        # (tail, prompt) travel server->client for all K at round start and
+        # client->server only for the clients that survived to aggregate
+        n_up = (aggregate > 0).sum()
+        metrics["wire/params_bytes"] = (K + n_up) * jnp.float32(sum(
             x.size * x.dtype.itemsize
             for x in jax.tree.leaves({"tail": params["tail"],
                                       "prompt": params["prompt"]})))
+        metrics["cohort/active"] = n_up
+        metrics["cohort/transmit_sum"] = transmit.sum()
 
-        return ({"params": new_params, "round": state["round"] + 1}, metrics)
+        extras = ({"trainable": trainable}
+                  if pcfg.return_client_trainable else {})
+        return ({"params": new_params, "round": state["round"] + 1},
+                metrics, extras)
 
-    def round(self, state: Params, client_data) -> Tuple[Params, Dict]:
-        state, metrics = self._round_jit(state, client_data)
+    def round(self, state: Params, client_data,
+              participation: Optional[Dict[str, Any]] = None,
+              init_tails=None) -> Tuple[Params, Dict]:
+        """Run one global round on a sampled cohort. `participation` is a
+        `fed.RoundPlan.participation()` dict; None means every client is on
+        time (the seed behavior). `init_tails` (K-stacked) starts each
+        client from its own personalized tail."""
+        if participation is None:
+            K = jax.tree.leaves(client_data)[0].shape[0]
+            ones = jnp.ones((K,), jnp.float32)
+            participation = {"transmit": ones, "aggregate": ones}
+        state, metrics, extras = self._round_jit(state, client_data,
+                                                 participation, init_tails)
+        self.last_client_trainable = extras.get("trainable")
         metrics = {k: float(v) for k, v in metrics.items()}
         self.meter.absorb({k.removeprefix("wire/").removesuffix("_bytes"): v
                            for k, v in metrics.items()
-                           if k.startswith("wire/")})
+                           if k.startswith("wire/")},
+                          clients=metrics.get("cohort/active"))
         return state, metrics
 
     # ------------------------------------------------------------- eval

@@ -13,7 +13,7 @@ top (1-gamma) by score. (Recorded in EXPERIMENTS.md §Deviations.)
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,6 @@ Segment placement notes (DESIGN.md §Arch-applicability):
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
@@ -32,8 +31,8 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models.config import ModelConfig
-from repro.models.transformer import (apply_block, init_block,
-                                      init_block_cache, init_stack, run_stack,
+from repro.models.transformer import (init_block,
+                                      init_stack, run_stack,
                                       stack_cache)
 from repro.runtime.boundary import WireSpec
 

@@ -1,0 +1,22 @@
+"""Federated population engine: N >> K clients, sampled cohorts,
+stragglers, and resumable rounds.
+
+  population.py — `Population`: the base dataset once + per-client index
+                  arrays (Dirichlet / IID from data/federated.py) and
+                  per-client persistent state, incl. personalized tails.
+  sampler.py    — `ClientSampler`: uniform / weighted / round-robin cohort
+                  draws, pure functions of (seed, round) => trivially
+                  checkpointable.
+  scheduler.py  — `RoundScheduler` + `StragglerConfig`: per-client latency
+                  (LINK_REGIMES, shared with benchmarks/latency_model.py),
+                  deadlines, dropouts; emits the participation arrays the
+                  protocol's partial FedAvg and wire metering consume.
+  engine.py     — `FederatedEngine`: the sample -> gather -> schedule ->
+                  train -> checkpoint loop, resumable byte-identically.
+"""
+from repro.fed.engine import FederatedEngine  # noqa: F401
+from repro.fed.population import Population  # noqa: F401
+from repro.fed.sampler import SAMPLER_KINDS, ClientSampler  # noqa: F401
+from repro.fed.scheduler import (  # noqa: F401
+    LINK_REGIMES, FullParticipationScheduler, RoundPlan, RoundScheduler,
+    StragglerConfig)

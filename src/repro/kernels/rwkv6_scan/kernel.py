@@ -16,7 +16,7 @@ VMEM-resident with room for double-buffered input chunks.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

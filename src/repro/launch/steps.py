@@ -13,9 +13,6 @@ Loss modes:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict
-
 import jax
 import jax.numpy as jnp
 
@@ -24,7 +21,7 @@ from repro.core.aggregation import broadcast_to_clients, fedavg
 from repro.models import layers as L
 from repro.core.split import SplitModel
 from repro.kernels.el2n.ops import el2n_scores
-from repro.optim import Optimizer, apply_updates, sgd
+from repro.optim import apply_updates, sgd
 
 ACT_DTYPE = jnp.bfloat16
 

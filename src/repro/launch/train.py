@@ -1,13 +1,23 @@
 """SFPrompt training launcher (runs the actual protocol end-to-end).
 
+Rounds run through the federated population engine: an N-client
+`Population` (N can be >> K), a deterministic `ClientSampler`, and a
+`RoundScheduler` that simulates stragglers/dropouts. Runs checkpoint the
+full round state (params, meter totals, sampler position) every
+`--ckpt-every` rounds; `--resume` restarts a killed run byte-identically.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch vit-base --reduced \\
       --dataset cifar100-syn --rounds 10 --clients 20 --k 5
-  PYTHONPATH=src python -m repro.launch.train --arch rwkv6-3b --reduced \\
-      --dataset lm-syn --rounds 5 --method sfl-ff
+  PYTHONPATH=src python -m repro.launch.train --arch vit-base --reduced \\
+      --clients 1000 --k 16 --sampler weighted --dropout-rate 0.2 \\
+      --regime edge_wan --rounds 50 --ckpt-every 5
+  # after a crash / preemption: identical continuation
+  PYTHONPATH=src python -m repro.launch.train ... --resume
 
 Methods: sfprompt (default), sfprompt-nolocal (Fig-6 ablation arm),
-fl, sfl-ff, sfl-linear.
+fl, sfl-ff, sfl-linear (baselines train their cohort synchronously —
+the straggler plan only applies to SFPrompt's partial aggregation).
 """
 from __future__ import annotations
 
@@ -18,15 +28,17 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.core import (BaselineConfig, FLTrainer, ProtocolConfig,
                         SFLTrainer, SFPromptTrainer, SplitConfig, SplitModel)
-from repro.data import (DATASETS, dirichlet_partition, iid_partition,
-                        select_clients, stack_clients, synthetic_image_dataset,
+from repro.core.comm import cost_inputs_from, sfprompt_comm, sfprompt_compute
+from repro.data import (DATASETS, synthetic_image_dataset,
                         synthetic_lm_dataset)
+from repro.fed import (ClientSampler, FederatedEngine, Population,
+                       RoundScheduler, StragglerConfig)
+from repro.fed.scheduler import LINK_REGIMES
 
 
 def build_data(args, cfg):
@@ -42,12 +54,54 @@ def build_data(args, cfg):
         test = synthetic_image_dataset(spec, max(128, args.samples // 8),
                                        seed=args.seed + 1,
                                        image_hw=args.image_hw)
-    if args.non_iid and "labels" in data:
-        clients = dirichlet_partition(data, args.clients, alpha=0.1,
-                                      seed=args.seed)
-    else:
-        clients = iid_partition(data, args.clients, seed=args.seed)
-    return clients, test
+    scheme = "dirichlet" if (args.non_iid and "labels" in data) else "iid"
+    population = Population.from_partition(data, args.clients, scheme=scheme,
+                                           alpha=0.1, seed=args.seed)
+    return population, test
+
+
+def build_trainer(args, model):
+    if args.method.startswith("sfprompt"):
+        pcfg = ProtocolConfig(
+            clients_per_round=args.k, local_epochs=args.local_epochs,
+            batch_size=args.batch_size, lr_local=args.lr, lr_split=args.lr,
+            use_local_loss=(args.method == "sfprompt"),
+            return_client_trainable=args.personalize_tails)
+        return SFPromptTrainer(model, pcfg)
+    if args.method == "fl":
+        return FLTrainer(model, BaselineConfig(
+            local_epochs=args.local_epochs, batch_size=args.batch_size,
+            lr=args.lr))
+    return SFLTrainer(model, BaselineConfig(
+        local_epochs=args.local_epochs, batch_size=args.batch_size,
+        lr=args.lr), mode=args.method.split("-")[1])
+
+
+def build_engine(args, trainer, population, cfg, split):
+    sampler = ClientSampler(
+        population.n_clients, args.k, kind=args.sampler, seed=args.seed,
+        weights=(population.sizes.astype(float)
+                 if args.sampler == "weighted" else None))
+    scheduler = None
+    if args.dropout_rate > 0 or args.straggle:
+        # per-client round cost from the Table-1 model bound to THIS
+        # model/split — the regime's comm-vs-compute mix then decides
+        # whether slow-link or slow-compute devices miss the deadline
+        toks = (args.seq_len if args.dataset == "lm-syn"
+                else (args.image_hw // 16) ** 2 + 1)
+        ci = cost_inputs_from(cfg, split, tokens_per_sample=toks,
+                              D=population.n_local, K=args.k,
+                              U=args.local_epochs)
+        scheduler = RoundScheduler(
+            StragglerConfig(regime=args.regime,
+                            deadline_factor=args.deadline_factor,
+                            dropout_rate=args.dropout_rate,
+                            late_mode=args.late_mode),
+            seed=args.seed,
+            round_bytes_per_client=sfprompt_comm(ci) / args.k,
+            round_flops_per_client=sfprompt_compute(ci))
+    return FederatedEngine(trainer, population, sampler, scheduler,
+                           personalize_tails=args.personalize_tails)
 
 
 def main():
@@ -55,6 +109,9 @@ def main():
     ap.add_argument("--arch", default="vit-base")
     ap.add_argument("--reduced", action="store_true",
                     help="use the reduced same-family config (CPU-sized)")
+    ap.add_argument("--layers", type=int, default=4,
+                    help="layer count for --reduced (must exceed "
+                         "head+tail cycles)")
     ap.add_argument("--method", default="sfprompt",
                     choices=["sfprompt", "sfprompt-nolocal", "fl",
                              "sfl-ff", "sfl-linear"])
@@ -62,8 +119,21 @@ def main():
                     choices=list(DATASETS) + ["lm-syn"])
     ap.add_argument("--non-iid", action="store_true")
     ap.add_argument("--rounds", type=int, default=10)
-    ap.add_argument("--clients", type=int, default=50)
+    ap.add_argument("--clients", type=int, default=50,
+                    help="population size N (sampled K per round)")
     ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--sampler", default="uniform",
+                    choices=["uniform", "weighted", "round_robin"])
+    ap.add_argument("--straggle", action="store_true",
+                    help="simulate stragglers even with --dropout-rate 0")
+    ap.add_argument("--dropout-rate", type=float, default=0.0)
+    ap.add_argument("--regime", default="fiber", choices=list(LINK_REGIMES))
+    ap.add_argument("--deadline-factor", type=float, default=1.5)
+    ap.add_argument("--late-mode", default="drop",
+                    choices=["drop", "partial"])
+    ap.add_argument("--personalize-tails", action="store_true",
+                    help="keep each sampled client's post-round tail in "
+                         "the population (sfprompt methods only)")
     ap.add_argument("--local-epochs", type=int, default=10)
     ap.add_argument("--batch-size", type=int, default=16)
     ap.add_argument("--samples", type=int, default=2000)
@@ -76,72 +146,100 @@ def main():
     ap.add_argument("--tail-cycles", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="runs")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint the full run state every N rounds "
+                         "(0 = only at the end)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the newest checkpoint under --out")
     ap.add_argument("--init-params", default=None,
                     help="checkpoint to warm-start from (pretrained backbone)")
     args = ap.parse_args()
+    if args.personalize_tails and not args.method.startswith("sfprompt"):
+        ap.error("--personalize-tails needs an sfprompt method")
+    if ((args.dropout_rate > 0 or args.straggle)
+            and not args.method.startswith("sfprompt")):
+        ap.error("straggler simulation (--dropout-rate/--straggle) needs an "
+                 "sfprompt method — FL/SFL baselines train their cohort "
+                 "synchronously")
 
     cfg = get_config(args.arch)
     if args.reduced:
-        cfg = cfg.reduced()
+        cfg = cfg.reduced(n_layers=args.layers)
     split = SplitConfig(head_cycles=args.head_cycles,
                         tail_cycles=args.tail_cycles,
                         prompt_len=args.prompt_len, prune_gamma=args.gamma,
                         local_epochs=args.local_epochs)
     model = SplitModel(cfg, split)
-    clients, test = build_data(args, cfg)
+    population, test = build_data(args, cfg)
+    if population.n_local < args.batch_size:
+        ap.error(
+            f"--batch-size {args.batch_size} exceeds the per-client shard "
+            f"of {population.n_local} samples (= --samples {args.samples} "
+            f"// --clients {args.clients}); lower --batch-size or raise "
+            f"--samples")
+
+    trainer = build_trainer(args, model)
+    engine = build_engine(args, trainer, population, cfg, split)
+    ckpt_dir = os.path.join(args.out, "ckpt")
 
     key = jax.random.PRNGKey(args.seed)
-    if args.method.startswith("sfprompt"):
-        pcfg = ProtocolConfig(
-            clients_per_round=args.k, local_epochs=args.local_epochs,
-            batch_size=args.batch_size, lr_local=args.lr, lr_split=args.lr,
-            use_local_loss=(args.method == "sfprompt"))
-        trainer = SFPromptTrainer(model, pcfg)
-    elif args.method == "fl":
-        trainer = FLTrainer(model, BaselineConfig(
-            local_epochs=args.local_epochs, batch_size=args.batch_size,
-            lr=args.lr))
+    resumed = args.resume and engine.restore(ckpt_dir)
+    if resumed:
+        print(f"resumed from round {engine.round_idx} ({ckpt_dir})",
+              flush=True)
     else:
-        trainer = SFLTrainer(model, BaselineConfig(
-            local_epochs=args.local_epochs, batch_size=args.batch_size,
-            lr=args.lr), mode=args.method.split("-")[1])
-
-    state = trainer.init(key)
-    if args.init_params:
-        from repro.checkpoint import load_checkpoint
-        warm = load_checkpoint(args.init_params)
-        params = dict(state["params"])
-        for seg in ("head", "body", "tail"):
-            if seg in warm:
-                params[seg] = jax.tree.map(jnp.asarray, warm[seg])
-        state = dict(state)
-        state["params"] = params
+        engine.init(key)
+        if args.init_params:
+            from repro.checkpoint import load_checkpoint
+            warm = load_checkpoint(args.init_params)
+            params = dict(engine.state["params"])
+            for seg in ("head", "body", "tail"):
+                if seg in warm:
+                    params[seg] = jax.tree.map(jnp.asarray, warm[seg])
+            engine.state = dict(engine.state, params=params)
 
     os.makedirs(args.out, exist_ok=True)
     log_path = os.path.join(
         args.out, f"{args.arch}_{args.method}_{args.dataset}"
         f"{'_noniid' if args.non_iid else ''}.jsonl")
-    log = open(log_path, "w")
+    if resumed and os.path.exists(log_path):
+        # drop records from rounds after the restored checkpoint — they are
+        # about to be replayed and would otherwise appear twice in the log
+        with open(log_path) as f:
+            kept = []
+            for line in f:
+                try:
+                    if json.loads(line).get("round", -1) < engine.round_idx:
+                        kept.append(line)
+                except json.JSONDecodeError:
+                    pass   # torn tail line from the kill
+        with open(log_path, "w") as f:
+            f.writelines(kept)
+    log = open(log_path, "a" if resumed else "w")
 
     t0 = time.time()
-    for r in range(args.rounds):
-        idx = select_clients(args.clients, args.k, seed=args.seed,
-                             round_idx=r)
-        batch = stack_clients(clients, idx)
-        state, metrics = trainer.round(
-            state, {k: jnp.asarray(v) for k, v in batch.items()})
+    while engine.round_idx < args.rounds:
+        r = engine.round_idx
+        plan, metrics = engine.run_round()
         ev = {}
         if hasattr(trainer, "evaluate"):
-            ev = trainer.evaluate(state["params"], test,
+            ev = trainer.evaluate(engine.params, test,
                                   batch_size=args.batch_size)
         rec = {"round": r, "wall_s": round(time.time() - t0, 1),
+               "cohort": plan.cohort.tolist(),
                **metrics, **{f"eval_{k}": v for k, v in ev.items()}}
         log.write(json.dumps(rec) + "\n")
         log.flush()
         print(rec, flush=True)
+        if args.ckpt_every and (r + 1) % args.ckpt_every == 0:
+            engine.save(ckpt_dir)
 
-    save_checkpoint(os.path.join(args.out, "final.npz"), state["params"])
+    engine.save(ckpt_dir)
+    save_checkpoint(os.path.join(args.out, "final.npz"), engine.params)
     print("saved", os.path.join(args.out, "final.npz"), "log:", log_path)
+    meter = getattr(trainer, "meter", None)
+    if meter is not None:
+        print(meter.report())
 
 
 if __name__ == "__main__":

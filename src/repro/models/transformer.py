@@ -12,7 +12,6 @@ Modes:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional
 
 import jax

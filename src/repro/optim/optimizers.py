@@ -7,7 +7,7 @@ per-client optimizer state in the federated phases.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional, Union
+from typing import Any, Callable, Union
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ hit the wire, as a traced scalar the protocol accumulates per round.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax

@@ -5,10 +5,21 @@ the actual payload shapes that crossed the wire) and ride through the
 protocol's jit/scan carries; `absorb()` folds a round's counters into
 host-side Python floats, and `report()`/`as_dict()` pretty-print them —
 benchmarks/comm_cost.py compares them against the analytical model.
+
+Under partial participation (fed.RoundScheduler) a round's counters are
+already straggler-scaled by the protocol; `absorb(counts, clients=k)`
+additionally records how many clients actually aggregated, so
+`per_client_round()` normalizes by ACTIVE client-rounds, not by cohort
+size — the honest per-device cost under dropouts.
+
+The meter is part of the resumable run state: `state_dict()` /
+`load_state_dict()` round-trip its totals exactly (floats, no re-metering),
+so a killed-and-restarted run reports the same cumulative traffic as an
+uninterrupted one.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Mapping
+from typing import Dict, Iterable, Mapping, Optional
 
 from repro.runtime.boundary import BOUNDARY_NAMES
 
@@ -21,13 +32,19 @@ class TrafficMeter:
         self.names = tuple(names)
         self.totals: Dict[str, float] = {n: 0.0 for n in self.names}
         self.rounds = 0
+        self.client_rounds = 0.0   # sum over rounds of active clients
 
-    def absorb(self, counts: Mapping[str, float]) -> None:
-        """Fold one round's counters (traced scalars or floats) in."""
+    def absorb(self, counts: Mapping[str, float], *,
+               clients: Optional[float] = None) -> None:
+        """Fold one round's counters (traced scalars or floats) in.
+        `clients`: how many clients' traffic the round actually carried
+        (active cohort under dropouts); defaults to unknown -> 0 added."""
         for name, v in counts.items():
             if name in self.totals:
                 self.totals[name] += float(v)
         self.rounds += 1
+        if clients is not None:
+            self.client_rounds += float(clients)
 
     def total_bytes(self) -> float:
         return sum(self.totals.values())
@@ -39,8 +56,33 @@ class TrafficMeter:
         r = max(1, self.rounds)
         return {n: v / r for n, v in self.as_dict().items()}
 
+    def per_client_round(self) -> Dict[str, float]:
+        """Bytes per ACTIVE client-round — the per-device cost a real
+        deployment bills, unchanged by how many stragglers were dropped."""
+        cr = max(1.0, self.client_rounds)
+        return {n: v / cr for n, v in self.as_dict().items()}
+
+    # ------------------------------------------------------------- resume
+    def state_dict(self) -> Dict[str, float]:
+        state = {f"totals/{n}": v for n, v in self.totals.items()}
+        state["rounds"] = float(self.rounds)
+        state["client_rounds"] = self.client_rounds
+        return state
+
+    def load_state_dict(self, state: Mapping[str, float]) -> None:
+        for n in self.totals:
+            key = f"totals/{n}"
+            if key in state:
+                self.totals[n] = float(state[key])
+        self.rounds = int(state["rounds"])
+        self.client_rounds = float(state["client_rounds"])
+
     def report(self) -> str:
         lines = [f"wire traffic over {self.rounds} round(s):"]
         for n, v in self.as_dict().items():
             lines.append(f"  {n:>10}: {v / MB:10.3f} MB")
+        if self.client_rounds > 0:
+            per = self.per_client_round()["total"]
+            lines.append(f"  ({self.client_rounds:.0f} active "
+                         f"client-rounds, {per / MB:.3f} MB each)")
         return "\n".join(lines)

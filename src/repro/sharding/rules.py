@@ -15,11 +15,11 @@ kv_heads=8 on model=16.
 from __future__ import annotations
 
 import re
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 # (path regex, trailing-dims spec). First match wins.
 _PARAM_RULES: Tuple[Tuple[str, Tuple], ...] = (

@@ -1,10 +1,7 @@
 """Data pipeline + checkpoint + sharding-rule tests."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import latest_checkpoint, load_checkpoint, save_checkpoint
 from repro.data import (DATASETS, dirichlet_partition, iid_partition,

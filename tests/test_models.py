@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ASSIGNED, all_configs, get_config
+from repro.configs import ASSIGNED, get_config
 from repro.core import losses
 from repro.models.transformer import Transformer
 from repro.optim import apply_updates, sgd

@@ -11,7 +11,7 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 from repro.core.aggregation import fedavg
-from repro.core.comm import (CostInputs, fl_comm, sfl_comm, sfprompt_comm,
+from repro.core.comm import (CostInputs, sfl_comm, sfprompt_comm,
                              sfprompt_compute_paper, sfl_compute)
 from repro.core.pruning import prune_indices
 from repro.kernels.el2n.ops import el2n_scores

@@ -4,7 +4,6 @@ on a tiny ViT, plus the launch-layer step factories on CPU."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.core import (ProtocolConfig, SFPromptTrainer, SplitConfig,

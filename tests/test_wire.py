@@ -13,7 +13,7 @@ from repro.core.comm import CostInputs, crosscheck
 from repro.data import (DATASETS, iid_partition, stack_clients,
                         synthetic_image_dataset)
 from repro.kernels.quant.ops import dequantize_int8, quantize_int8
-from repro.runtime import (Boundary, Int8Codec, TrafficMeter, WireSpec,
+from repro.runtime import (Boundary, Int8Codec, WireSpec,
                            get_codec)
 from repro.runtime.hetero import ClientPlan, HeteroSFPromptTrainer
 
