@@ -27,8 +27,12 @@ from typing import Dict
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_BASELINE = os.path.join(ROOT, "BENCH_kernels.json")
-DEFAULT_RESULTS = os.path.join(ROOT, "benchmarks", "results",
-                               "kernel_microbench.json")
+# every results file that can contribute (ref_us, <impl>_us) ratio pairs;
+# missing files are skipped so partial bench runs still gate what they ran
+DEFAULT_RESULTS = [
+    os.path.join(ROOT, "benchmarks", "results", "kernel_microbench.json"),
+    os.path.join(ROOT, "benchmarks", "results", "serve_throughput.json"),
+]
 
 
 def flatten(results: Dict) -> Dict[str, float]:
@@ -94,7 +98,9 @@ def check(baseline: Dict[str, float], current: Dict[str, float], *,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
-    ap.add_argument("--results", default=DEFAULT_RESULTS)
+    ap.add_argument("--results", action="append", default=None,
+                    help="results JSON (repeatable; default: kernel "
+                         "microbench + serve throughput)")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="allowed fractional slowdown (default 0.25)")
     ap.add_argument("--strict", action="store_true",
@@ -104,16 +110,24 @@ def main(argv=None) -> int:
                     help="rewrite the baseline from the current results")
     args = ap.parse_args(argv)
 
-    if not os.path.exists(args.results):
-        print(f"skip: no benchmark results at {args.results} "
-              f"(run benchmarks/run.py --only kernel_microbench first)")
+    results_paths = args.results or DEFAULT_RESULTS
+    current: Dict[str, float] = {}
+    sources = []
+    for path in results_paths:
+        if not os.path.exists(path):
+            print(f"skip: no benchmark results at {path}")
+            continue
+        with open(path) as f:
+            current.update(flatten(json.load(f)))
+        sources.append(os.path.relpath(path, ROOT))
+    if not sources:
+        print("skip: no benchmark results found "
+              "(run benchmarks/run.py --only kernel_microbench first)")
         return 0
-    with open(args.results) as f:
-        current = flatten(json.load(f))
 
     if args.update:
         payload = {"kernels": current,
-                   "meta": {"source": os.path.relpath(args.results, ROOT),
+                   "meta": {"source": sources,
                             "threshold": args.threshold}}
         with open(args.baseline, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True)

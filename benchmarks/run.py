@@ -24,6 +24,8 @@ SUITES = {
     "roofline": ("benchmarks.roofline", "deliverable g"),
     "perf_compare": ("benchmarks.perf_compare", "baseline vs optimized"),
     "kernel_microbench": ("benchmarks.kernel_microbench", "kernel wall times"),
+    "serve": ("benchmarks.serve_throughput",
+              "serving engine tok/s + latency"),
     "accuracy": ("benchmarks.accuracy", "Table 3 / Fig 4"),
     "prompt_length": ("benchmarks.prompt_length", "Fig 5"),
     "ablation_local_loss": ("benchmarks.ablation_local_loss", "Fig 6"),

@@ -25,13 +25,21 @@ from repro.core.split import SplitModel
 def score_client_data(model: SplitModel, head_p, tail_p, prompt,
                       data: Dict[str, jnp.ndarray], *, batch_size: int,
                       impl: str = "ref") -> jnp.ndarray:
-    """EL2N score for every sample of one client's dataset (n, ...).
-    Runs the LOCAL route (head -> tail), batched; n % batch_size == 0."""
+    """EL2N score for EVERY sample of one client's dataset (n, ...).
+    Runs the LOCAL route (head -> tail), batched. When n is not a multiple
+    of batch_size the final batch is padded by wrapping to the dataset's
+    start and the padding's scores are masked off, so `prune_indices` ranks
+    all n samples instead of silently never scoring the last
+    n % batch_size of them."""
     n = jax.tree.leaves(data)[0].shape[0]
-    nb = n // batch_size
+    nb = -(-n // batch_size)            # ceil: the last batch may be padded
+    if nb * batch_size != n:
+        # wrap-pad with real samples (scores of the padding are discarded
+        # below); modular indexing also covers batch_size > n
+        idx = jnp.arange(nb * batch_size) % n
+        data = jax.tree.map(lambda x: jnp.take(x, idx, axis=0), data)
     batched = jax.tree.map(
-        lambda x: x[: nb * batch_size].reshape((nb, batch_size) + x.shape[1:]),
-        data)
+        lambda x: x.reshape((nb, batch_size) + x.shape[1:]), data)
 
     def score_batch(_, batch):
         ho = model.head_fwd(head_p, prompt, batch, mode="train", impl=impl)
@@ -40,7 +48,7 @@ def score_client_data(model: SplitModel, head_p, tail_p, prompt,
         return None, losses.task_el2n(model.cfg, out, batch, impl=impl)
 
     _, scores = jax.lax.scan(score_batch, None, batched)
-    return scores.reshape(-1)
+    return scores.reshape(-1)[:n]
 
 
 def prune_indices(scores: jnp.ndarray, gamma: float) -> jnp.ndarray:

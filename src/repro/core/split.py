@@ -169,6 +169,45 @@ class SplitModel:
                 (batch, cfg.encoder.n_frames, cfg.d_model), dtype)
         return cache
 
+    # ------------------------------------------------- slotted allocation
+    # A serving engine's shared KV cache is `init_cache(n_slots, ...)`:
+    # every batch row is a SLOT that one in-flight request owns. The
+    # helpers below move whole slots between a fresh single-request cache
+    # and the shared one, so a prefill computed at batch=1 can join an
+    # in-flight decode batch without draining it (serve/engine.py).
+
+    def blank_slot_cache(self, seq_len: int, dtype=jnp.float32,
+                         window=None) -> Params:
+        """A fresh batch=1 cache — the state of one unoccupied slot."""
+        return self.init_cache(1, seq_len, dtype, window=window)
+
+    @staticmethod
+    def _slot_axis(path) -> int:
+        # every cache leaf carries the batch (=slot) axis at 1, after the
+        # stacked-layer axis — except the head's encoder_out at axis 0
+        return 0 if any(getattr(p, "key", None) == "encoder_out"
+                        for p in path) else 1
+
+    def cache_write_slot(self, shared: Params, single: Params,
+                         slot) -> Params:
+        """Scatter a batch=1 cache pytree into slot `slot` (traced int) of
+        the shared n-slot cache. Overwrites every leaf of that slot, so a
+        newly allocated slot never sees a previous tenant's KV state."""
+        def wr(path, s, one):
+            ax = self._slot_axis(path)
+            return jax.lax.dynamic_update_index_in_dim(
+                s, jnp.take(one, 0, axis=ax).astype(s.dtype), slot, ax)
+        return jax.tree_util.tree_map_with_path(wr, shared, single)
+
+    def cache_read_slot(self, shared: Params, slot) -> Params:
+        """Gather slot `slot` of the shared cache as a batch=1 cache."""
+        def rd(path, s):
+            ax = self._slot_axis(path)
+            return jnp.expand_dims(
+                jax.lax.dynamic_index_in_dim(s, slot, ax, keepdims=False),
+                ax)
+        return jax.tree_util.tree_map_with_path(rd, shared)
+
     # -------------------------------------------------------------- embed
     def _embed(self, head_p, batch, mode, prompt, dtype):
         cfg = self.cfg

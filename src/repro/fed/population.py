@@ -104,10 +104,14 @@ class Population:
             self._tails[int(cid)] = jax.tree.map(
                 lambda x: np.asarray(x[pos]), stacked_tail)
 
-    def get_tails(self, cohort: Sequence[int], default_tail) -> Optional[List]:
+    def get_tails(self, cohort: Sequence[int], default_tail,
+                  *, always: bool = False) -> Optional[List]:
         """Per-client tails for a cohort (global tail for never-sampled
-        clients); None if no client has a personalized tail yet."""
-        if not self._tails:
+        clients); None if no client has a personalized tail yet.
+        `always=True` returns the default-filled list even when nothing is
+        personalized — the serving TenantBank wants one entry per tenant
+        regardless."""
+        if not self._tails and not always:
             return None
         return [self._tails.get(int(c), default_tail) for c in cohort]
 

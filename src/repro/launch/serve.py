@@ -1,18 +1,19 @@
-"""Batched split-inference serving loop (production shape of the decode
-dry-runs): continuous prefill + decode against a shared KV cache, with the
-aggregated fine-tuned (tail, prompt).
+"""Continuous-batching split-serving launcher.
 
-Serving crosses the same head->body / body->tail wire boundaries as
-training: pick the codec with --wire (fp32 | bf16 | int8) and the loop
-reports the measured smashed-tensor traffic next to the token rate.
+Runs the `serve.ServeEngine` — slot-based shared KV cache, interleaved
+prefill/decode so requests join in-flight batches, per-tenant
+(tail, prompt) from a `TenantBank` — against the deterministic synthetic
+workload (Poisson arrivals, mixed prompt/output lengths, pure function of
+--seed). Reports tokens/s, p50/p99 latency, slot occupancy, and the
+measured smashed-tensor wire traffic next to the analytical per-token
+model.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --reduced \\
-      --requests 8 --new-tokens 32 --wire int8
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \\
+      --requests 16 --slots 8 --tenants 4 --wire int8
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -20,24 +21,56 @@ import jax.numpy as jnp
 from repro.checkpoint import load_checkpoint
 from repro.configs import get_config
 from repro.core import SplitConfig, SplitModel
-from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.runtime import TrafficMeter, WireSpec
+from repro.core.comm import serve_comm_breakdown
+from repro.runtime import WireSpec
 from repro.runtime.meter import MB
+from repro.serve import (ServeConfig, ServeEngine, TenantBank,
+                         WorkloadConfig, synthetic_requests)
 
 
-def main():
+def personalized_bank(model: SplitModel, params, n_tenants: int,
+                      *, jitter: float = 0.05) -> TenantBank:
+    """A demo TenantBank: tenant 0 serves the aggregated global
+    (tail, prompt); every other tenant gets a deterministically perturbed
+    copy, standing in for the per-client tails a federation run stores in
+    the Population (see examples/serve_tenants.py for the real flow)."""
+    tails, prompts = [], []
+    for t in range(n_tenants):
+        if t == 0 or jitter == 0.0:
+            tails.append(params["tail"])
+            prompts.append(params["prompt"])
+            continue
+        key = jax.random.fold_in(jax.random.PRNGKey(101), t)
+        leaves, treedef = jax.tree.flatten(params["tail"])
+        ks = jax.random.split(key, len(leaves) + 1)
+        tails.append(jax.tree.unflatten(treedef, [
+            x + jitter * jax.random.normal(k, x.shape, x.dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x
+            for x, k in zip(leaves, ks[:-1])]))
+        prompts.append(params["prompt"] + jitter * jax.random.normal(
+            ks[-1], params["prompt"].shape, params["prompt"].dtype))
+    return TenantBank.from_lists(tails, prompts)
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-tokens", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=32)
-    ap.add_argument("--window", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--mean-interarrival", type=float, default=1.0,
+                    help="Poisson arrival gap in engine steps")
+    ap.add_argument("--prompt-choices", type=int, nargs="+",
+                    default=[8, 16, 32])
+    ap.add_argument("--new-token-choices", type=int, nargs="+",
+                    default=[4, 8, 16])
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--params", default=None, help="checkpoint to serve")
-    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--wire", default="fp32", choices=("fp32", "bf16", "int8"),
                     help="codec for the smashed tensors on both boundaries")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -51,49 +84,41 @@ def main():
         loaded = load_checkpoint(args.params)
         params = jax.tree.map(jnp.asarray, loaded)
 
-    prefill = jax.jit(make_prefill_step(model, with_wire_bytes=True))
-    decode = jax.jit(make_decode_step(model, with_wire_bytes=True))
-    meter = TrafficMeter()
-    B = args.requests
-    total = args.prompt_tokens + args.new_tokens + split.prompt_len
-    cache = model.init_cache(B, seq_len=total, window=args.window)
-    toks = jax.random.randint(jax.random.PRNGKey(1),
-                              (B, args.prompt_tokens), 0, cfg.vocab_size)
-    batch = {"tokens": toks}
-    if cfg.arch_type == "vlm":
-        batch["patch_embeds"] = 0.02 * jax.random.normal(
-            jax.random.PRNGKey(2), (B, 8, cfg.d_model))
-    if cfg.arch_type == "audio":
-        batch["frames"] = 0.02 * jax.random.normal(
-            jax.random.PRNGKey(2), (B, cfg.encoder.n_frames, cfg.d_model))
+    bank = personalized_bank(model, params, args.tenants)
+    engine = ServeEngine(model, params, bank,
+                         ServeConfig(n_slots=args.slots,
+                                     max_seq=args.max_seq))
+    reqs = synthetic_requests(WorkloadConfig(
+        n_requests=args.requests,
+        mean_interarrival=args.mean_interarrival,
+        prompt_choices=tuple(args.prompt_choices),
+        new_token_choices=tuple(args.new_token_choices),
+        n_tenants=args.tenants, vocab_size=cfg.vocab_size,
+        seed=args.seed))
+    stats = engine.run(reqs)
 
-    t0 = time.time()
-    logits, cache, wb = prefill(params, batch, cache)
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    t_pre = time.time() - t0
-    meter.absorb(wb)
-    extra = split.prompt_len + (8 if cfg.arch_type == "vlm" else 0)
-
-    key = jax.random.PRNGKey(7)
-    t0 = time.time()
-    n_out = 1
-    for i in range(args.new_tokens - 1):
-        pos = jnp.full((B,), args.prompt_tokens + extra + i, jnp.int32)
-        tok, logits, cache, wb = decode(params, {"tokens": tok[:, None],
-                                                 "pos": pos}, cache)
-        meter.absorb(wb)
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits / args.temperature, axis=-1).astype(jnp.int32)
-        n_out += 1
-    dt = time.time() - t0
-    print(f"prefill: {B}x{args.prompt_tokens} in {t_pre:.2f}s | "
-          f"decode: {B}x{n_out} in {dt:.2f}s = {B*n_out/dt:.1f} tok/s")
-    print(f"wire [{wire.describe()}]: "
-          f"{meter.total_bytes() / MB:.3f} MB smashed traffic "
-          f"({meter.totals['head_body'] / MB:.3f} head_body + "
-          f"{meter.totals['body_tail'] / MB:.3f} body_tail)")
+    print(f"{cfg.name}: {stats['n_finished']} requests over "
+          f"{args.tenants} tenants | {stats['tokens_out']} tokens in "
+          f"{stats['wall_s']:.2f}s = {stats['tok_per_s']:.1f} tok/s "
+          f"(incl. compile)")
+    print(f"latency p50 {stats['p50_latency_s'] * 1e3:.0f} ms | "
+          f"p99 {stats['p99_latency_s'] * 1e3:.0f} ms | "
+          f"occupancy {stats['occupancy']:.2f} | "
+          f"{stats['prefills']} prefills / {stats['decode_steps']} "
+          f"decode steps | rejected {stats['rejected']}")
+    measured = stats["wire_bytes"]
+    # compare against what was actually SERVED — admission control may
+    # have rejected part of the trace, and rejected requests never cross
+    # the wire
+    analytical = serve_comm_breakdown(
+        wire, d_model=cfg.d_model, soft_prompt_len=split.prompt_len,
+        requests=[(len(f.req.tokens), f.req.max_new)
+                  for f in stats["finished"]])
+    print(f"wire [{wire.describe()}]: {measured['total'] / MB:.3f} MB "
+          f"measured ({measured['head_body'] / MB:.3f} head_body + "
+          f"{measured['body_tail'] / MB:.3f} body_tail) vs "
+          f"{sum(analytical.values()) / MB:.3f} MB analytical")
+    return stats
 
 
 if __name__ == "__main__":

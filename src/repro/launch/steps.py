@@ -123,12 +123,15 @@ def make_train_step(model: SplitModel, *, n_clients: int,
 
 
 def make_prefill_step(model: SplitModel, *, impl: str = "ref",
-                      unroll: bool = False, with_wire_bytes: bool = False):
+                      unroll: bool = False, with_wire_bytes: bool = False,
+                      dtype=ACT_DTYPE):
     """Prefill crosses both wire boundaries once (forward only); with
-    `with_wire_bytes` the step also returns the measured per-link bytes."""
+    `with_wire_bytes` the step also returns the measured per-link bytes.
+    `dtype` is the activation dtype (bf16 production default; the serving
+    engine's logit-equivalence tests run fp32)."""
     def prefill_step(params, batch, cache):
         out = model.forward(params, batch, route="split", mode="prefill",
-                            cache=cache, impl=impl, dtype=ACT_DTYPE,
+                            cache=cache, impl=impl, dtype=dtype,
                             unroll=unroll)
         if with_wire_bytes:
             return out["logits"][:, -1, :], out["cache"], out["wire_bytes"]
@@ -137,10 +140,11 @@ def make_prefill_step(model: SplitModel, *, impl: str = "ref",
 
 
 def make_decode_step(model: SplitModel, *, impl: str = "ref",
-                     unroll: bool = False, with_wire_bytes: bool = False):
+                     unroll: bool = False, with_wire_bytes: bool = False,
+                     dtype=ACT_DTYPE):
     def decode_step(params, batch, cache):
         out = model.forward(params, batch, route="split", mode="decode",
-                            cache=cache, impl=impl, dtype=ACT_DTYPE,
+                            cache=cache, impl=impl, dtype=dtype,
                             unroll=unroll)
         logits = out["logits"][:, 0, :]
         next_tok = jnp.argmax(logits, -1).astype(jnp.int32)

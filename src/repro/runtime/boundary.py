@@ -40,15 +40,27 @@ class Boundary:
         return (jax.random.uniform(kf, shape, jnp.float32),
                 jax.random.uniform(kb, shape, jnp.float32))
 
-    def transmit(self, x: jnp.ndarray, *, key=None,
-                 train: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def transmit(self, x: jnp.ndarray, *, key=None, train: bool = True,
+                 rows=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Push `x` across this boundary. Returns (received tensor,
         wire bytes as a traced f32 scalar). `train=True` counts the backward
-        gradient crossing too (same shape, same codec, opposite direction)."""
+        gradient crossing too (same shape, same codec, opposite direction).
+
+        `rows` (optional, traced): number of leading-axis rows that actually
+        cross the wire. A continuous-batching decode step runs all cache
+        slots but only transmits the occupied ones — bytes then count
+        `rows * payload_nbytes(one row)` instead of the full tensor."""
         u_fwd, u_bwd = self._noise(key, x.shape)
         y = self.codec.roundtrip(x, u_fwd, u_bwd)
-        nbytes = self.codec.payload_nbytes(x.shape) * (2 if train else 1)
-        return y, jnp.float32(nbytes)
+        direction = 2 if train else 1
+        if rows is None:
+            nbytes = jnp.float32(self.codec.payload_nbytes(x.shape)
+                                 * direction)
+        else:
+            per_row = self.codec.payload_nbytes((1,) + tuple(x.shape[1:]))
+            nbytes = (jnp.asarray(rows, jnp.float32)
+                      * jnp.float32(per_row * direction))
+        return y, nbytes
 
     def payload_nbytes(self, shape) -> int:
         return self.codec.payload_nbytes(shape)

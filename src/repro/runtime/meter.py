@@ -62,6 +62,13 @@ class TrafficMeter:
         cr = max(1.0, self.client_rounds)
         return {n: v / cr for n, v in self.as_dict().items()}
 
+    def per_token(self, n_tokens: float) -> Dict[str, float]:
+        """Bytes per generated token — the serving analogue of
+        `per_client_round`; `n_tokens` comes from the engine's counter
+        (the meter itself has no notion of tokens)."""
+        t = max(1.0, float(n_tokens))
+        return {n: v / t for n, v in self.as_dict().items()}
+
     # ------------------------------------------------------------- resume
     def state_dict(self) -> Dict[str, float]:
         state = {f"totals/{n}": v for n, v in self.totals.items()}

@@ -1,0 +1,86 @@
+"""TenantBank: per-tenant (tail, prompt) parameters for split serving.
+
+SFPrompt's end state is a fine-tuned split model serving real clients: the
+frozen body is SHARED on the server, while each tenant (a client, or a
+cohort of clients that fine-tuned together) owns its personalized tail and
+soft prompt — the personalized-tail regime of flexible split FL
+(arXiv:2508.10349) at serving time.
+
+The bank stacks all tenants' tails/prompts with a leading tenant axis, so
+one jitted decode step serves a heterogeneous batch: the engine gathers
+`jnp.take(bank.tails, tenant_ids, axis=0)` per cache slot and vmaps the
+tail segment over slots. Adding a tenant is a host-side restack, never a
+recompile (the stacked shapes only depend on the architecture).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+class TenantBank:
+    """Stacked per-tenant (tail, prompt) pytrees (leading axis = tenant)."""
+
+    def __init__(self, tails: Params, prompts: jnp.ndarray):
+        n_t = jax.tree.leaves(tails)[0].shape[0]
+        if prompts.shape[0] != n_t:
+            raise ValueError(
+                f"tails carry {n_t} tenants but prompts {prompts.shape[0]}")
+        self.tails = tails
+        self.prompts = prompts
+        self.n_tenants = n_t
+
+    # ----------------------------------------------------------- builders
+    @classmethod
+    def from_lists(cls, tails: Sequence[Params],
+                   prompts: Sequence[jnp.ndarray]) -> "TenantBank":
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *tails)
+        return cls(stacked, jnp.stack(list(prompts)))
+
+    @classmethod
+    def replicate(cls, tail: Params, prompt: jnp.ndarray,
+                  n_tenants: int) -> "TenantBank":
+        """All tenants share the global (tail, prompt) — the pre-
+        personalization deployment."""
+        tails = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_tenants,) + x.shape),
+            tail)
+        prompts = jnp.broadcast_to(prompt[None],
+                                   (n_tenants,) + prompt.shape)
+        return cls(tails, prompts)
+
+    @classmethod
+    def from_population(cls, population, tenant_ids: Sequence[int],
+                        global_tail: Params, global_prompt: jnp.ndarray,
+                        prompts: Optional[Sequence[jnp.ndarray]] = None,
+                        ) -> "TenantBank":
+        """Source tenants from a `fed.Population`'s personalized tails
+        (clients that trained with `return_client_trainable=True`); clients
+        the federation never personalized serve the global tail."""
+        tails: List[Params] = population.get_tails(
+            tenant_ids, global_tail, always=True)
+        pr = (list(prompts) if prompts is not None
+              else [global_prompt] * len(tails))
+        return cls.from_lists(tails, pr)
+
+    # ------------------------------------------------------------- lookup
+    def gather_tails(self, tenant_ids: jnp.ndarray) -> Params:
+        """Per-slot tail params: leading axis becomes the slot axis."""
+        return jax.tree.map(
+            lambda x: jnp.take(x, tenant_ids, axis=0), self.tails)
+
+    def prompt(self, tenant_id: int) -> jnp.ndarray:
+        return self.prompts[int(tenant_id)]
+
+    def tail(self, tenant_id: int) -> Params:
+        return jax.tree.map(lambda x: x[int(tenant_id)], self.tails)
+
+    def nbytes(self) -> int:
+        """Host memory of the bank — the cost of personalization."""
+        return int(sum(np.asarray(x).nbytes for x in
+                       jax.tree.leaves((self.tails, self.prompts))))

@@ -1,0 +1,289 @@
+"""ServeEngine: multi-tenant continuous-batching engine for split inference.
+
+Slot lifecycle (see ARCHITECTURE.md §Serving engine):
+
+    queue ──admit──> FREE slot ──prefill──> ACTIVE ──max_new reached──> FREE
+      ^                (batch=1, tenant         (joins the batched
+      └ admission       tail+prompt, cache       decode every step)
+        control         scattered into the
+        (max_queue)     slot's cache rows)
+
+The shared KV cache is `SplitModel.init_cache(n_slots, ...)`: batch row i
+IS slot i, owned by at most one in-flight request. Scheduling interleaves
+prefill and decode: each `step()` admits up to `prefills_per_step` queued
+requests into free slots (a batch=1 prefill each, scattered via
+`cache_write_slot`), then runs ONE batched decode step over all slots —
+requests join and leave mid-flight without ever draining the batch.
+
+Per-tenant personalization: every request carries a tenant id; decode
+gathers that tenant's tail from the `TenantBank` per slot (vmapped tail,
+one compiled step for heterogeneous tenants) and prefill injects the
+tenant's soft prompt. The frozen head/body are shared by everyone.
+
+All smashed tensors cross the `WireSpec` boundaries; the engine's
+`TrafficMeter` holds measured bytes (decode metered per occupied row),
+cross-checked against `core.comm.serve_comm_breakdown` in tests and CI.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.split import SplitModel
+from repro.runtime.meter import TrafficMeter
+from repro.serve.bank import TenantBank
+from repro.serve.steps import (make_batched_decode_step,
+                               make_tenant_prefill_step)
+from repro.serve.workload import Request
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    n_slots: int = 8          # concurrent requests (shared-cache batch)
+    max_seq: int = 128        # per-slot KV window (prompt + soft prompt
+    #                           + generated tokens must fit)
+    max_queue: int = 64       # admission control: pending-request cap
+    prefills_per_step: int = 2  # joins per engine step (prefill/decode mix)
+    dtype: Any = jnp.float32
+    impl: str = "ref"
+
+
+@dataclass
+class _SlotState:
+    req: Request
+    next_pos: int             # absolute position of the next decode token
+    tokens: List[int] = field(default_factory=list)
+    logits: List[np.ndarray] = field(default_factory=list)
+    t_submit: float = 0.0
+
+
+@dataclass
+class Finished:
+    req: Request
+    tokens: np.ndarray                      # (max_new,) generated ids
+    latency_s: float
+    logits: Optional[np.ndarray] = None     # (max_new, V) if collected
+
+
+class ServeEngine:
+    def __init__(self, model: SplitModel, shared_params, bank: TenantBank,
+                 cfg: ServeConfig, *, collect_logits: bool = False):
+        if model.cfg.arch_type in ("vit", "audio", "vlm") \
+                or model.cfg.encoder is not None:
+            raise ValueError(
+                f"{model.cfg.name}: the serving engine decodes token "
+                f"streams; arch_type {model.cfg.arch_type!r} has no "
+                f"token decode loop")
+        self.model = model
+        self.shared = {"head": shared_params["head"],
+                       "body": shared_params["body"]}
+        self.bank = bank
+        self.cfg = cfg
+        self.collect_logits = collect_logits
+        self.meter = TrafficMeter()
+
+        S = cfg.n_slots
+        self.cache = model.init_cache(S, seq_len=cfg.max_seq,
+                                      dtype=jnp.float32)
+        self._blank = model.blank_slot_cache(cfg.max_seq,
+                                             dtype=jnp.float32)
+        self._tokens = np.zeros((S,), np.int32)     # next input per slot
+        self._pos = np.zeros((S,), np.int32)
+        self._tenants = np.zeros((S,), np.int32)
+        self._slots: List[Optional[_SlotState]] = [None] * S
+        self._free: List[int] = list(range(S))      # free-list (LIFO)
+        self._queue: List[Request] = []
+        self._t_enqueue: Dict[int, float] = {}      # rid -> submit time
+
+        self._prefill = jax.jit(make_tenant_prefill_step(
+            model, impl=cfg.impl, dtype=cfg.dtype))
+        self._decode = jax.jit(make_batched_decode_step(
+            model, impl=cfg.impl, dtype=cfg.dtype))
+        self._write_slot = jax.jit(model.cache_write_slot)
+
+        # step accounting
+        self.step_idx = 0
+        self.decode_steps = 0
+        self.prefill_count = 0
+        self.rejected = 0
+        self.tokens_out = 0
+        self._occupancy_sum = 0.0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> bool:
+        """Admission control: False (rejected) once the queue is full."""
+        total = len(req.tokens) + self.model.split.prompt_len + req.max_new
+        if total > self.cfg.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt({len(req.tokens)}) + soft "
+                f"prompt({self.model.split.prompt_len}) + "
+                f"new({req.max_new}) = {total} exceeds the slot window "
+                f"{self.cfg.max_seq}")
+        if req.tenant >= self.bank.n_tenants:
+            raise ValueError(f"request {req.rid}: unknown tenant "
+                             f"{req.tenant} (bank has {self.bank.n_tenants})")
+        if len(self._queue) >= self.cfg.max_queue:
+            self.rejected += 1
+            return False
+        self._t_enqueue[req.rid] = time.perf_counter()
+        self._queue.append(req)
+        return True
+
+    @property
+    def n_active(self) -> int:
+        return self.cfg.n_slots - len(self._free)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def idle(self) -> bool:
+        return self.n_active == 0 and not self._queue
+
+    # ------------------------------------------------------------ prefill
+    def _admit_one(self, req: Request) -> Optional[Finished]:
+        slot = self._free.pop()
+        prompt_np = np.asarray(req.tokens, np.int32)[None]
+        batch = {"tokens": jnp.asarray(prompt_np)}
+        tail = self.bank.tail(req.tenant)
+        prompt = self.bank.prompt(req.tenant)
+        tok, logits, slot_cache, wb = self._prefill(
+            self.shared, tail, prompt, batch, self._blank)
+        self.cache = self._write_slot(self.cache, slot_cache,
+                                      jnp.int32(slot))
+        self.meter.absorb({k: float(v) for k, v in wb.items()})
+        self.prefill_count += 1
+        self.tokens_out += 1
+
+        st = _SlotState(req=req,
+                        t_submit=self._t_enqueue.pop(
+                            req.rid, time.perf_counter()),
+                        next_pos=len(req.tokens)
+                        + self.model.split.prompt_len)
+        st.tokens.append(int(tok[0]))
+        if self.collect_logits:
+            st.logits.append(np.asarray(logits[0]))
+        if req.max_new <= 1:
+            self._free.append(slot)
+            return self._finish(st)
+        self._slots[slot] = st
+        self._tokens[slot] = int(tok[0])
+        self._pos[slot] = st.next_pos
+        self._tenants[slot] = req.tenant
+        return None
+
+    def _finish(self, st: _SlotState) -> Finished:
+        return Finished(
+            req=st.req, tokens=np.asarray(st.tokens, np.int32),
+            latency_s=time.perf_counter() - st.t_submit,
+            logits=(np.stack(st.logits) if st.logits else None))
+
+    # -------------------------------------------------------------- step
+    def step(self) -> List[Finished]:
+        """One engine step: admit up to `prefills_per_step` queued requests
+        into free slots, then one batched decode over every occupied slot.
+        Returns the requests that completed during this step."""
+        done: List[Finished] = []
+        admitted = 0
+        while (self._queue and self._free
+               and admitted < self.cfg.prefills_per_step):
+            fin = self._admit_one(self._queue.pop(0))
+            admitted += 1
+            if fin is not None:
+                done.append(fin)
+
+        active = np.array([s is not None for s in self._slots], bool)
+        if active.any():
+            self._occupancy_sum += active.sum() / self.cfg.n_slots
+            tok, logits, self.cache, wb = self._decode(
+                self.shared, self.bank.tails,
+                jnp.asarray(self._tenants), jnp.asarray(self._tokens),
+                jnp.asarray(self._pos), jnp.asarray(active, jnp.float32),
+                self.cache)
+            self.meter.absorb({k: float(v) for k, v in wb.items()})
+            self.decode_steps += 1
+            tok_np = np.asarray(tok)
+            logits_np = np.asarray(logits) if self.collect_logits else None
+            for slot, st in enumerate(self._slots):
+                if st is None:
+                    continue
+                st.tokens.append(int(tok_np[slot]))
+                if self.collect_logits:
+                    st.logits.append(logits_np[slot])
+                self.tokens_out += 1
+                st.next_pos += 1
+                self._tokens[slot] = tok_np[slot]
+                self._pos[slot] = st.next_pos
+                if len(st.tokens) >= st.req.max_new:
+                    done.append(self._finish(st))
+                    self._slots[slot] = None
+                    self._free.append(slot)
+        self.step_idx += 1
+        return done
+
+    # ------------------------------------------------------------- reset
+    def reset_stats(self) -> None:
+        """Zero the run counters and the meter (engine must be idle): one
+        engine can then serve several measured traces without cross-run
+        accumulation, and arrival schedules replay from step 0 while the
+        jit caches stay warm (benchmarks warm up this way)."""
+        if not self.idle:
+            raise RuntimeError("reset_stats with requests in flight")
+        self.meter = TrafficMeter()
+        self.step_idx = 0
+        self.decode_steps = 0
+        self.prefill_count = 0
+        self.rejected = 0
+        self.tokens_out = 0
+        self._occupancy_sum = 0.0
+
+    # ------------------------------------------------------------ driver
+    def run(self, requests: Sequence[Request], *,
+            max_steps: int = 100_000) -> Dict[str, Any]:
+        """Drive a full (arrival-sorted) request trace to completion.
+        Deterministic in (engine seed state, trace): scheduling decisions
+        depend only on arrival steps and queue/slot order."""
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        finished: List[Finished] = []
+        t0 = time.perf_counter()
+        i = 0
+        while (i < len(pending) or not self.idle):
+            while i < len(pending) and pending[i].arrival <= self.step_idx:
+                self.submit(pending[i])
+                i += 1
+            finished.extend(self.step())
+            if self.step_idx > max_steps:
+                raise RuntimeError(f"workload did not drain in "
+                                   f"{max_steps} engine steps")
+        wall = time.perf_counter() - t0
+        return self.stats(finished, wall)
+
+    def stats(self, finished: List[Finished], wall_s: float,
+              ) -> Dict[str, Any]:
+        lat = sorted(f.latency_s for f in finished) or [0.0]
+
+        def pct(p):
+            return lat[min(len(lat) - 1, int(p * len(lat)))]
+
+        return {
+            "finished": finished,
+            "n_finished": len(finished),
+            "rejected": self.rejected,
+            "tokens_out": self.tokens_out,
+            "wall_s": wall_s,
+            "tok_per_s": self.tokens_out / max(wall_s, 1e-9),
+            "p50_latency_s": pct(0.50),
+            "p99_latency_s": pct(0.99),
+            "occupancy": (self._occupancy_sum
+                          / max(1, self.decode_steps)),
+            "decode_steps": self.decode_steps,
+            "prefills": self.prefill_count,
+            "wire_bytes": self.meter.as_dict(),
+            "wire_per_token": self.meter.per_token(self.tokens_out),
+        }

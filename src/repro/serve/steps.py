@@ -1,0 +1,92 @@
+"""jit-able steps of the continuous-batching split-serving engine.
+
+Two step shapes, both crossing the PR-1 wire boundaries:
+
+* `make_tenant_prefill_step` — one request joins: head (+ the tenant's soft
+  prompt) -> body -> the tenant's tail, at batch=1 against a blank slot
+  cache. The engine scatters the resulting cache into the request's slot of
+  the shared KV cache, so the join never drains the in-flight batch.
+* `make_batched_decode_step` — one token for EVERY occupied slot: the
+  frozen head and body run the whole slot batch through one jitted step
+  (shared parameters), then the tail is vmapped over slots with each slot's
+  TENANT tail gathered from the bank — heterogeneous tenants, one compiled
+  function.
+
+Wire accounting: prefill transmits exactly the request's smashed tensor;
+decode transmits per OCCUPIED row (`Boundary.transmit(rows=n_active)`) —
+idle slots ride through compute for shape stability but never count bytes,
+mirroring a deployment that simply doesn't send those rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.split import SplitModel
+
+
+def make_tenant_prefill_step(model: SplitModel, *, impl: str = "ref",
+                             dtype=jnp.float32):
+    """prefill_step(shared, tail, prompt, batch, cache) ->
+    (next_tok (1,), last_logits (1, V), cache, wire_bytes)."""
+    def prefill_step(shared, tail, prompt, batch, cache):
+        params = {"head": shared["head"], "body": shared["body"],
+                  "tail": tail, "prompt": prompt}
+        out = model.forward(params, batch, route="split", mode="prefill",
+                            cache=cache, impl=impl, dtype=dtype,
+                            prompt=prompt)
+        logits = out["logits"][:, -1, :].astype(jnp.float32)
+        next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return next_tok, logits, out["cache"], out["wire_bytes"]
+    return prefill_step
+
+
+def make_batched_decode_step(model: SplitModel, *, impl: str = "ref",
+                             dtype=jnp.float32):
+    """decode_step(shared, bank_tails, tenant_ids, tokens, pos, active,
+    cache) -> (next_tok (S,), logits (S, V), cache, wire_bytes).
+
+    `tokens`/`pos`/`tenant_ids` are per-slot (S,) arrays; `active` is the
+    (S,) occupancy mask — idle slots compute garbage that the host ignores
+    (their cache rows are wholly overwritten at the next allocation) and
+    contribute zero wire bytes.
+    """
+    wire = model.wire
+
+    def tail_one(tail_p, x_row, pos_row, stack_row):
+        # one slot's tail, batch=1: vmap removes the slot axis, so rebuild
+        # the singleton batch axis the segment stack expects
+        head_out = {"mode": "decode", "positions": pos_row[None, None],
+                    "seq_pos": pos_row[None, None], "impl": impl,
+                    "remat": False, "unroll": False,
+                    "encoder_out": None, "n_prefix": 0}
+        cache1 = {"stack": jax.tree.map(lambda c: c[:, None], stack_row)}
+        to = model.tail_fwd(tail_p, x_row[None], head_out, cache=cache1)
+        new_stack = jax.tree.map(lambda c: c[:, 0], to["cache"]["stack"])
+        return to["logits"][0, 0].astype(jnp.float32), new_stack
+
+    # slot axis: 0 on gathered tails / smashed rows / positions, 1 on
+    # every cache leaf (after the stacked-layer axis)
+    tail_slots = jax.vmap(tail_one, in_axes=(0, 0, 0, 1), out_axes=(0, 1))
+
+    def decode_step(shared, bank_tails, tenant_ids, tokens, pos, active,
+                    cache):
+        batch = {"tokens": tokens[:, None], "pos": pos}
+        ho = model.head_fwd(shared["head"], None, batch, mode="decode",
+                            cache=cache["head"], impl=impl, dtype=dtype)
+        n_active = jnp.sum(active.astype(jnp.float32))
+        x, b_hb = wire.head_body.transmit(ho["smashed"], train=False,
+                                          rows=n_active)
+        bo = model.body_fwd(shared["body"], x, ho, cache=cache["body"])
+        x, b_bt = wire.body_tail.transmit(bo["smashed"], train=False,
+                                          rows=n_active)
+        tails = jax.tree.map(lambda t: jnp.take(t, tenant_ids, axis=0),
+                             bank_tails)
+        logits, new_tail_stack = tail_slots(tails, x, pos,
+                                            cache["tail"]["stack"])
+        next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        new_cache = {"head": ho["cache"], "body": bo["cache"],
+                     "tail": {"stack": new_tail_stack}}
+        return next_tok, logits, new_cache, {"head_body": b_hb,
+                                             "body_tail": b_bt}
+    return decode_step

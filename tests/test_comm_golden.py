@@ -1,0 +1,89 @@
+"""Golden-value tests for the analytical Table-1 comm model.
+
+Every expected number below is HAND-COMPUTED from the paper's Table-1
+formulas (see core/comm.py's conventions docstring) with binary-exact
+inputs, so any refactor that drifts the analytical model — a factor of 2,
+a misplaced K, a bytes term — fails loudly against a literal constant
+instead of passing a self-consistent-but-wrong crosscheck.
+
+Shared inputs: W=1e6, alpha=0.25, tau=0.5 (=> Wt = 0.25e6 = 250_000),
+q=1000, D=100, U=10, E=1, K=5, p=2000, gamma_keep=0.6.
+"""
+import pytest
+
+from repro.core.comm import (CostInputs, fl_comm, sfl_comm, sfprompt_comm,
+                             sfprompt_comm_breakdown,
+                             sfprompt_comm_breakdown_partial)
+
+
+def make_inputs(bytes_smashed):
+    return CostInputs(W=1e6, alpha=0.25, tau=0.5, q=1000, D=100, U=10,
+                      E=1, K=5, p=2000, gamma_keep=0.6,
+                      bytes_smashed=bytes_smashed, bytes_param=4)
+
+
+# One boundary carries 2q (fwd activation + bwd gradient) per sample per
+# phase-2 pass over the kept subset, for each of K clients:
+#   per_boundary = 2 * q * gamma_keep * D * E * bytes_smashed * K
+#               = 2 * 1000 * 0.6 * 100 * 1 * bytes_smashed * 5
+#               = 600_000 * bytes_smashed
+# (tail + prompt) go up + down once per round for each of K clients:
+#   params = 2 * (Wt + p) * bytes_param * K
+#          = 2 * (250_000 + 2000) * 4 * 5 = 10_080_000
+@pytest.mark.parametrize("bytes_smashed,per_boundary", [
+    (4.0, 2_400_000.0),     # fp32 smashed tensors
+    (2.0, 1_200_000.0),     # bf16
+    (1.25, 750_000.0),      # int8 + per-row scale overhead
+])
+def test_sfprompt_breakdown_full_cohort_golden(bytes_smashed, per_boundary):
+    c = make_inputs(bytes_smashed)
+    got = sfprompt_comm_breakdown(c)
+    assert got["head_body"] == pytest.approx(per_boundary, rel=1e-12)
+    assert got["body_tail"] == pytest.approx(per_boundary, rel=1e-12)
+    assert got["params"] == pytest.approx(10_080_000.0, rel=1e-12)
+    # the scalar total is exactly the sum of the per-link breakdown
+    assert sfprompt_comm(c) == pytest.approx(sum(got.values()), rel=1e-12)
+
+
+def test_sfprompt_breakdown_partial_cohort_golden():
+    """Partial participation (fed.RoundPlan): transmit_sum = 3.5 (one
+    straggler sent half), n_uploads = 3 survivors, k_down = 5 sampled.
+
+      per_boundary_client = 2 * 1000 * 0.6 * 100 * 1 * 4 = 480_000
+      head_body = body_tail = 480_000 * 3.5 = 1_680_000
+      params    = (250_000 + 2000) * 4 * (5 + 3) = 8_064_000
+    """
+    c = make_inputs(4.0)
+    got = sfprompt_comm_breakdown_partial(c, transmit_sum=3.5, n_uploads=3,
+                                          k_down=5)
+    assert got["head_body"] == pytest.approx(1_680_000.0, rel=1e-12)
+    assert got["body_tail"] == pytest.approx(1_680_000.0, rel=1e-12)
+    assert got["params"] == pytest.approx(8_064_000.0, rel=1e-12)
+
+
+@pytest.mark.parametrize("bytes_smashed", [4.0, 2.0, 1.25])
+def test_partial_reduces_to_synchronous_at_full_participation(bytes_smashed):
+    """transmit_sum = n_uploads = k_down = K must reproduce the
+    synchronous breakdown exactly, link by link."""
+    c = make_inputs(bytes_smashed)
+    sync = sfprompt_comm_breakdown(c)
+    part = sfprompt_comm_breakdown_partial(c, transmit_sum=c.K,
+                                           n_uploads=c.K, k_down=c.K)
+    for name in sync:
+        assert part[name] == pytest.approx(sync[name], rel=1e-12), name
+
+
+def test_fl_and_sfl_comm_golden():
+    """FL: 2|W|K * bytes = 2 * 1e6 * 5 * 4 = 40_000_000.
+    SFL: (4q D U * bytes_smashed + 2 (1-tau)|W| * bytes_param) * K
+       = (4*1000*100*10*4 + 2*500_000*4) * 5 = (16e6 + 4e6) * 5 = 1e8."""
+    c = make_inputs(4.0)
+    assert fl_comm(c) == pytest.approx(40_000_000.0, rel=1e-12)
+    assert sfl_comm(c) == pytest.approx(100_000_000.0, rel=1e-12)
+
+
+def test_sfprompt_comm_total_golden():
+    """fp32: 2 * 2_400_000 + 10_080_000 = 14_880_000 bytes/round —
+    2.7x under SFL's 1e8 even before int8 smashed payloads."""
+    assert sfprompt_comm(make_inputs(4.0)) == pytest.approx(
+        14_880_000.0, rel=1e-12)

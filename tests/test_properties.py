@@ -78,6 +78,69 @@ def test_prune_keeps_top_scores(n, gamma, seed):
         assert kept.min() >= dropped.max() - 1e-6
 
 
+@given(n=st.integers(4, 64), seed=st.integers(0, 2**30),
+       gamma=st.sampled_from([0.0, 1.0 / 64, 0.5, 0.97, 0.999]))
+@settings(**SETTINGS)
+def test_prune_edge_gammas_and_ordering(n, seed, gamma):
+    """gamma=0 keeps everything (in descending-score order), gamma≈1 still
+    keeps >= 1, and the kept block is always sorted descending."""
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    idx = np.asarray(prune_indices(scores, gamma))
+    assert len(idx) == max(1, n - int(gamma * n))
+    assert len(set(idx.tolist())) == len(idx)          # no duplicates
+    kept = np.asarray(scores)[idx]
+    assert np.all(np.diff(kept) <= 1e-6)               # descending
+    if gamma == 0.0:
+        assert sorted(idx.tolist()) == list(range(n))  # permutation of all
+
+
+@given(n=st.integers(4, 40), gamma=st.floats(0.0, 0.99),
+       n_values=st.integers(1, 3), seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_prune_duplicate_scores(n, gamma, n_values, seed):
+    """Ties (few distinct score values, incl. ALL-equal) never break the
+    keep-count/validity/ordering invariants."""
+    key = jax.random.PRNGKey(seed)
+    values = jax.random.normal(key, (n_values,))
+    scores = values[jax.random.randint(jax.random.fold_in(key, 1),
+                                       (n,), 0, n_values)]
+    idx = np.asarray(prune_indices(scores, gamma))
+    assert len(idx) == max(1, n - int(gamma * n))
+    assert len(set(idx.tolist())) == len(idx)
+    assert np.all((idx >= 0) & (idx < n))
+    kept = np.asarray(scores)[idx]
+    dropped = np.delete(np.asarray(scores), idx)
+    if len(dropped):
+        assert kept.min() >= dropped.max() - 1e-6
+
+
+# ------------------------------------------------------------------ int8 codec
+@given(rows=st.integers(1, 6), d=st.integers(2, 96),
+       scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**30))
+@settings(max_examples=10, deadline=None)
+def test_int8_roundtrip_stochastic_unbiased(rows, d, scale, seed):
+    """Stochastic int8 rounding is unbiased: averaging the round-trip over
+    many independent noise draws converges to x within the standard error
+    of the per-row quantization step, for arbitrary shapes/scales."""
+    from repro.runtime.codec import get_codec
+    codec = get_codec("int8", impl="ref")
+    key = jax.random.PRNGKey(seed)
+    x = scale * jax.random.normal(key, (rows, d), jnp.float32)
+    draws = 256
+    u = jax.random.uniform(jax.random.fold_in(key, 1),
+                           (draws, rows, d), jnp.float32)
+    decoded = jax.vmap(
+        lambda ui: codec.decode(codec.encode(x, ui), jnp.float32))(u)
+    mean_err = np.asarray(jnp.abs(decoded.mean(0) - x))
+    step = np.asarray(jnp.max(jnp.abs(x), -1, keepdims=True)) / 127.0
+    # se of a mean of `draws` uniform-rounding errors is <= step/(2 sqrt n)
+    tol = 4.0 * step / (2.0 * np.sqrt(draws)) + 1e-7
+    assert np.all(mean_err <= tol), (mean_err.max(), tol.min())
+    # and a single draw is always within one quantization step
+    one = np.asarray(jnp.abs(decoded[0] - x))
+    assert np.all(one <= step + 1e-6)
+
+
 # ------------------------------------------------------------------ comm model
 @given(W=st.floats(1e6, 1e12), D=st.integers(10, 10_000),
        U=st.integers(1, 20), gamma_keep=st.floats(0.05, 1.0),

@@ -8,6 +8,7 @@ import pytest
 from repro.configs import get_config
 from repro.core import (BaselineConfig, FLTrainer, ProtocolConfig,
                         SFLTrainer, SFPromptTrainer, SplitConfig, SplitModel)
+from repro.core import pruning
 from repro.core.aggregation import broadcast_to_clients, fedavg
 from repro.data import (DATASETS, iid_partition, select_clients,
                         stack_clients, synthetic_image_dataset)
@@ -136,3 +137,22 @@ def test_fedavg_weighted():
     np.testing.assert_allclose(np.asarray(out["w"]), 2.5 * np.ones(3))
     back = broadcast_to_clients(out, 2)
     assert back["w"].shape == (2, 3)
+
+
+def test_score_client_data_scores_every_sample(tiny_setup):
+    """Regression: n % batch_size != 0 used to silently drop the last
+    partial batch from EL2N scoring, so `prune_indices` never ranked those
+    samples. The padded+masked final batch must score all n, identically
+    to any other batching of the same data."""
+    cfg, split, model, clients, _ = tiny_setup
+    data = {k: jnp.asarray(v[:19]) for k, v in clients[0].items()}
+    params = model.init(KEY)
+    args = (model, params["head"], params["tail"], params["prompt"], data)
+    s_odd = pruning.score_client_data(*args, batch_size=8)   # 19 % 8 != 0
+    assert s_odd.shape == (19,)
+    s_one = pruning.score_client_data(*args, batch_size=1)
+    np.testing.assert_allclose(np.asarray(s_odd), np.asarray(s_one),
+                               rtol=1e-5, atol=1e-6)
+    # every sample is rankable: keep-all returns a permutation of range(n)
+    idx = pruning.prune_indices(s_odd, gamma=0.0)
+    assert sorted(np.asarray(idx).tolist()) == list(range(19))
