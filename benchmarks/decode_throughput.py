@@ -1,0 +1,179 @@
+"""Decode fast-path throughput: scan stepping, decode attention, slot sweep.
+
+Three measurements of the serving hot loop:
+
+  decode_scan       — per-token dispatch (one jitted call + host sync per
+                      token, the pre-fast-path ServeEngine loop) vs
+                      `make_multi_decode_step` running the same per-token
+                      body inside one lax.scan. The gated
+                      `decode_scan/scan_speedup` ratio is the dispatch
+                      amortization win at 8 slots (floor 2.0 in
+                      BENCH_kernels.json).
+  decode_attention  — single-query cache-read attention: the full-path jnp
+                      oracle (GQA head repeat materialized at the group x
+                      cache footprint) vs the decode-specialized grouped
+                      path (`decode.py` impl='xla'); gated as
+                      `decode_attention/fused_speedup`.
+  slots             — end-to-end engine tokens/s vs slot count with the
+                      fast path on (decode_block=8), informational.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import FAST, row, save, time_fn
+from repro.configs import get_config
+from repro.core import SplitConfig, SplitModel
+from repro.kernels.flash_attention.decode import decode_attention
+from repro.runtime import WireSpec
+from repro.serve import (ServeConfig, ServeEngine, TenantBank,
+                         WorkloadConfig, make_batched_decode_step,
+                         make_multi_decode_step, synthetic_requests)
+
+MAX_SEQ = 64
+PROMPT_LEN = 4
+SLOTS = 8
+SCAN_BLOCK = 16
+
+
+def build():
+    cfg = get_config("qwen2.5-14b").reduced(
+        n_layers=3, d_model=64, d_ff=128, vocab_size=256)
+    split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=PROMPT_LEN)
+    model = SplitModel(cfg, split, WireSpec.make("int8"))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def bench_scan_stepping(model, params, out, lines):
+    """Per-token dispatch vs scan stepping over the same decode body.
+
+    Timing is BEST-of-reps: dispatch-cost noise is one-sided (contention
+    only ever adds), so the minimum is the stable estimator for the ratio
+    the hard floor in BENCH_kernels.json (scan_speedup >= 2.0) gates."""
+    S = SLOTS
+    shared = {"head": params["head"], "body": params["body"]}
+    bank = TenantBank.replicate(params["tail"], params["prompt"], 2)
+    cache = model.init_cache(S, seq_len=MAX_SEQ, dtype=jnp.float32)
+    tenants = jnp.zeros((S,), jnp.int32)
+    tokens = jnp.arange(S, dtype=jnp.int32) % 100
+    pos = jnp.full((S,), PROMPT_LEN + 4, jnp.int32)
+    active = jnp.ones((S,), jnp.float32)
+    remaining = jnp.full((S,), 10_000, jnp.int32)
+
+    one = jax.jit(make_batched_decode_step(model))
+    multi = jax.jit(make_multi_decode_step(model, SCAN_BLOCK))
+    total = 16 if FAST else 32
+    reps = 5 if FAST else 8
+
+    def per_token():
+        # the pre-fast-path ServeEngine loop: one dispatch, one token sync,
+        # AND one wire-bytes float() sync per generated token
+        c, t, p = cache, tokens, pos
+        for _ in range(total):
+            t, _, c, wb = one(shared, bank.tails, tenants, t, p, active, c)
+            t.block_until_ready()
+            _ = {k: float(v) for k, v in wb.items()}
+            p = p + 1
+        return c
+
+    def scanned():
+        c, t, p = cache, tokens, pos
+        wire = None
+        for _ in range(total // SCAN_BLOCK):
+            ts, _, c, wb = multi(shared, bank.tails, tenants, t, p,
+                                 remaining, c)
+            ts.block_until_ready()      # one sync per SCAN_BLOCK tokens
+            wire = wb if wire is None else jax.tree.map(jnp.add, wire, wb)
+            t, p = ts[-1], p + SCAN_BLOCK
+        _ = {k: float(v) for k, v in wire.items()}   # one flush at exit
+        return c
+
+    def timeit(fn):
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+
+    per_token(), scanned()               # warmup compiles
+    # INTERLEAVED best-of-reps: host contention is one-sided noise and
+    # hits whatever happens to be running — alternating the two loops and
+    # taking each side's minimum keeps the gated ratio stable under load
+    t_tok, t_scan = [], []
+    for _ in range(reps):
+        t_tok.append(timeit(per_token))
+        t_scan.append(timeit(scanned))
+    t_tok = min(t_tok) / total * 1e6
+    t_scan = min(t_scan) / total * 1e6
+    out["decode_scan"] = {"ref_us": t_tok, "scan_us": t_scan}
+    lines.append(row("decode/scan_stepping", t_scan,
+                     f"per_token={t_tok:.0f}us "
+                     f"speedup={t_tok / t_scan:.2f}x @{S}slots"))
+
+
+def bench_decode_attention(out, lines):
+    """Full-path oracle vs the decode-specialized grouped attention."""
+    B, W, Hq, Hkv, D = SLOTS, 512 if FAST else 2048, 32, 8, 64
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (B, 1, Hq, D))
+    k = jax.random.normal(key, (B, W, Hkv, D))
+    v = jax.random.normal(key, (B, W, Hkv, D))
+    kvp = jnp.broadcast_to(jnp.arange(W, dtype=jnp.int32)[None], (B, W))
+    qp = jnp.full((B,), W - 1, jnp.int32)
+
+    full = jax.jit(lambda q, k, v: decode_attention(
+        q, k, v, q_positions=qp, kv_positions=kvp, impl="ref"))
+    fused = jax.jit(lambda q, k, v: decode_attention(
+        q, k, v, q_positions=qp, kv_positions=kvp, impl="xla"))
+    t_ref = time_fn(full, q, k, v, iters=3)
+    t_fused = time_fn(fused, q, k, v, iters=3)
+    out["decode_attention"] = {"ref_us": t_ref, "fused_us": t_fused}
+    lines.append(row("decode/attention_fused", t_fused,
+                     f"full_ref={t_ref:.0f}us "
+                     f"speedup={t_ref / t_fused:.2f}x GQA{Hq // Hkv}x W={W}"))
+
+
+def bench_slot_sweep(cfg, model, params, out, lines):
+    """End-to-end engine tokens/s vs slot count, fast path on."""
+    bank = TenantBank.replicate(params["tail"], params["prompt"], 2)
+    sweep = (1, 4) if FAST else (1, 2, 4, 8)
+    tok_per_s = {}
+    for n_slots in sweep:
+        wl = WorkloadConfig(
+            n_requests=2 * n_slots, mean_interarrival=0.0,
+            prompt_choices=(8, 16), new_token_choices=(16,),
+            n_tenants=2, vocab_size=cfg.vocab_size, seed=0)
+        reqs = synthetic_requests(wl)
+        engine = ServeEngine(model, params, bank,
+                             ServeConfig(n_slots=n_slots, max_seq=MAX_SEQ,
+                                         max_queue=256,
+                                         prefills_per_step=n_slots,
+                                         decode_block=SCAN_BLOCK))
+        engine.run(reqs)        # warmup compiles
+        engine.reset_stats()
+        t0 = time.perf_counter()
+        stats = engine.run(reqs)
+        wall = time.perf_counter() - t0
+        tokens = int(np.sum([len(f.tokens) for f in stats["finished"]]))
+        tok_per_s[str(n_slots)] = tokens / max(wall, 1e-9)
+        lines.append(row(f"decode/tok_per_s_{n_slots}slots",
+                         wall / max(1, tokens) * 1e6,
+                         f"{tokens / max(wall, 1e-9):.1f} tok/s"))
+    out["slots"] = {"tok_per_s": tok_per_s, "decode_block": SCAN_BLOCK}
+
+
+def run():
+    out, lines = {}, []
+    cfg, model, params = build()
+    bench_scan_stepping(model, params, out, lines)
+    bench_decode_attention(out, lines)
+    bench_slot_sweep(cfg, model, params, out, lines)
+    save("decode_throughput", out)
+    return lines
+
+
+if __name__ == "__main__":
+    run()

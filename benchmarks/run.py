@@ -26,6 +26,8 @@ SUITES = {
     "kernel_microbench": ("benchmarks.kernel_microbench", "kernel wall times"),
     "serve": ("benchmarks.serve_throughput",
               "serving engine tok/s + latency"),
+    "decode": ("benchmarks.decode_throughput",
+               "decode fast path: scan stepping + decode attention"),
     "accuracy": ("benchmarks.accuracy", "Table 3 / Fig 4"),
     "prompt_length": ("benchmarks.prompt_length", "Fig 5"),
     "ablation_local_loss": ("benchmarks.ablation_local_loss", "Fig 6"),

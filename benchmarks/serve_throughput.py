@@ -36,18 +36,25 @@ def build():
     return cfg, model, params
 
 
-def drive(model, params, bank, reqs, *, n_slots):
+def warm_engine(model, params, bank, reqs, *, n_slots):
+    # both arms run the decode fast path (scan stepping, donated caches) so
+    # the gated ratio isolates the continuous-batching win itself — the
+    # dispatch-amortization win is gated separately by decode_throughput.py
     engine = ServeEngine(model, params, bank,
                          ServeConfig(n_slots=n_slots, max_seq=MAX_SEQ,
                                      max_queue=256,
-                                     prefills_per_step=n_slots))
+                                     prefills_per_step=n_slots,
+                                     decode_block=8))
     engine.run(reqs)   # warmup pass: compiles prefill buckets + decode
-    engine.reset_stats()   # timed pass replays the trace from step 0
+    return engine
+
+
+def timed_replay(engine, reqs):
+    """One timed replay of the trace on a warm engine (from step 0)."""
+    engine.reset_stats()
     t0 = time.perf_counter()
     stats = engine.run(reqs)
-    wall = time.perf_counter() - t0
-    tokens = sum(len(f.tokens) for f in stats["finished"])
-    return stats, wall / max(1, tokens) * 1e6, tokens
+    return time.perf_counter() - t0, stats
 
 
 def run():
@@ -65,9 +72,22 @@ def run():
         n_tenants=n_tenants, vocab_size=cfg.vocab_size, seed=0)
     reqs = synthetic_requests(wl)
 
-    seq_stats, seq_us, _ = drive(model, params, bank, reqs, n_slots=1)
-    eng_stats, eng_us, tokens = drive(model, params, bank, reqs,
-                                      n_slots=slots)
+    seq_engine = warm_engine(model, params, bank, reqs, n_slots=1)
+    batch_engine = warm_engine(model, params, bank, reqs, n_slots=slots)
+    # INTERLEAVED best-of-reps: host contention is one-sided noise; taking
+    # each arm's minimum over alternating replays keeps the gated ratio
+    # stable under load (a burst covering one whole arm would skew it)
+    seq_wall, eng_wall = float("inf"), float("inf")
+    for _ in range(5):
+        w, seq_stats = timed_replay(seq_engine, reqs)
+        seq_wall = min(seq_wall, w)
+        w, eng_stats = timed_replay(batch_engine, reqs)
+        eng_wall = min(eng_wall, w)
+    tokens_seq = sum(len(f.tokens) for f in seq_stats["finished"])
+    tokens = sum(len(f.tokens) for f in eng_stats["finished"])
+    assert tokens_seq == tokens, (tokens_seq, tokens)  # same served trace
+    seq_us = seq_wall / max(1, tokens_seq) * 1e6
+    eng_us = eng_wall / max(1, tokens) * 1e6
 
     analytical = serve_comm_breakdown(
         model.wire, d_model=cfg.d_model, soft_prompt_len=PROMPT_LEN,

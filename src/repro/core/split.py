@@ -208,6 +208,15 @@ class SplitModel:
                 ax)
         return jax.tree_util.tree_map_with_path(rd, shared)
 
+    def jit_slot_writer(self, *, donate: bool = True):
+        """Jitted `cache_write_slot` for serving engines. With `donate` the
+        SHARED cache argument of the scatter is donated, so a slot join
+        updates the n-slot pytree in place instead of copying every cache
+        leaf per admission (decode fast path — backends without donation
+        silently fall back to the copy)."""
+        return jax.jit(self.cache_write_slot,
+                       donate_argnums=(0,) if donate else ())
+
     # -------------------------------------------------------------- embed
     def _embed(self, head_p, batch, mode, prompt, dtype):
         cfg = self.cfg

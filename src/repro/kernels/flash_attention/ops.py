@@ -6,10 +6,11 @@ impl:
   'interpret' — Pallas kernel executed by the interpreter on CPU (tests)
   'auto'      — 'pallas' on TPU, 'ref' elsewhere
 
-The kernel path covers train/prefill attention (contiguous positions from 0).
-Decode (q_offset / explicit kv_positions — including ring-buffer caches) uses
-the ref path: a 1-token query is bandwidth-trivial and gains nothing from
-blocking.
+The full kernel path covers train/prefill attention (contiguous positions
+from 0). Single-query cache reads (Sq=1 with q_offset / explicit
+kv_positions — the decode hot path, including ring-buffer caches) dispatch
+to the dedicated decode-attention kernel in `decode.py`; multi-query calls
+with explicit positions (prefill continuation) stay on the ref oracle.
 """
 from __future__ import annotations
 
@@ -20,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.decode import decode_attention
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 
 
@@ -56,16 +58,31 @@ def flash_attention(
     block_q: int = 128,
     block_kv: int = 128,
 ) -> jnp.ndarray:
+    needs_pos = q_offset is not None or kv_positions is not None
+    if needs_pos and causal and q.shape[1] == 1:
+        # decode hot path: one query token against a (ring-buffer) cache.
+        # Dispatch BEFORE resolving 'auto' — decode_attention has its own
+        # resolution ('pallas' on TPU, the grouped 'xla' path elsewhere),
+        # so auto callers get the fast path on every backend.
+        B, Skv = k.shape[0], k.shape[1]
+        q_positions = (jnp.zeros((B,), jnp.int32) if q_offset is None
+                       else q_offset)
+        kvp = (jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32)[None],
+                                (B, Skv))
+               if kv_positions is None else kv_positions)
+        return decode_attention(
+            q, k, v, q_positions=q_positions, kv_positions=kvp,
+            sliding_window=sliding_window, softcap=softcap, scale=scale,
+            impl=impl, block_kv=block_kv)
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "ref"
     if impl == "analysis":
         impl = "blocked"
-    needs_ref = q_offset is not None or kv_positions is not None
-    if impl == "blocked" and not needs_ref:
+    if impl == "blocked" and not needs_pos:
         return ref.blocked_attention(
             q, k, v, causal=causal, sliding_window=sliding_window,
             softcap=softcap, scale=scale)
-    if impl in ("ref", "blocked") or needs_ref:
+    if impl in ("ref", "blocked") or needs_pos:
         return ref.attention(
             q, k, v, causal=causal, q_offset=q_offset,
             kv_positions=kv_positions, sliding_window=sliding_window,

@@ -62,6 +62,15 @@ def attention(
     return out.astype(q.dtype)
 
 
+def _auto_block(s: int, target_blocks: int = 6) -> int:
+    """Block edge targeting ~`target_blocks` blocks per axis, multiple of
+    128: enough blocks that causal dead-block skipping recovers ~40% of the
+    FLOPs, few enough that the unrolled HLO stays small (the dry-run
+    analysis compile lowers this at 32k sequences)."""
+    edge = -(-s // target_blocks)
+    return max(128, -(-edge // 128) * 128)
+
+
 def blocked_attention(
     q: jnp.ndarray,              # (B, Sq, Hq, Dh)
     k: jnp.ndarray,              # (B, Skv, Hkv, Dh)
@@ -71,46 +80,75 @@ def blocked_attention(
     sliding_window: Optional[int] = None,
     softcap: Optional[float] = None,
     scale: Optional[float] = None,
-    block_kv: int = 2048,
+    block_q: Optional[int] = None,
+    block_kv: Optional[int] = None,
 ) -> jnp.ndarray:
-    """XLA-native flash attention: an UNROLLED python loop over kv blocks
-    with online-softmax accumulation — O(Sq * block) live memory, no lax
-    control flow (so dry-run cost_analysis counts it correctly), same math
-    as the Pallas kernel. Used for dry-run analysis compiles and as the
-    production CPU path for long sequences."""
+    """XLA-native flash attention: UNROLLED python loops over (q, kv) block
+    pairs with online-softmax accumulation — O(block_q * block_kv) live
+    score memory, no lax control flow (so dry-run cost_analysis counts it
+    correctly), same math as the Pallas kernel.
+
+    Two things make it FASTER than the full ref path rather than a
+    memory-only trade (BENCH_kernels.json pins blocked_speedup >= 1.0):
+      * dead-block skipping — (q, kv) pairs entirely above the causal
+        diagonal or left of every row's sliding window are never emitted,
+        ~40% of the work at 6 blocks/axis;
+      * grouped GQA contraction — q heads are folded to (Hkv, group) and
+        contracted against the raw K/V, never materializing the
+        group-repeated (B, Skv, Hq) tensors the oracle builds.
+    Interior blocks (fully inside the causal region) also skip the mask
+    materialization entirely."""
     B, Sq, Hq, Dh = q.shape
     _, Skv, Hkv, _ = k.shape
+    Dv = v.shape[-1]
     group = Hq // Hkv
     if scale is None:
         scale = Dh ** -0.5
-    qf = q.astype(jnp.float32) * scale
-    q_pos = jnp.arange(Sq, dtype=jnp.int32)
+    bq = block_q or _auto_block(Sq)
+    bkv = block_kv or _auto_block(Skv)
 
-    acc = jnp.zeros((B, Sq, Hq, v.shape[-1]), jnp.float32)
-    m = jnp.full((B, Sq, Hq, 1), NEG_INF, jnp.float32)
-    l = jnp.zeros((B, Sq, Hq, 1), jnp.float32)
+    # head-major f32 layout once, group folded out of the head axis
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)
+    qf = qf.reshape(B, Hkv, group, Sq, Dh)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)   # (B, Hkv, Skv, Dh)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)   # (B, Hkv, Skv, Dv)
 
-    for start in range(0, Skv, block_kv):
-        end = min(start + block_kv, Skv)
-        if causal and start > Sq - 1:
-            break  # fully above the diagonal
-        kb = jnp.repeat(k[:, start:end].astype(jnp.float32), group, axis=2)
-        vb = jnp.repeat(v[:, start:end].astype(jnp.float32), group, axis=2)
-        s = jnp.einsum("bqhd,bkhd->bqhk", qf, kb)
-        if softcap is not None:
-            s = softcap * jnp.tanh(s / softcap)
-        cols = jnp.arange(start, end, dtype=jnp.int32)
-        mask = jnp.ones((Sq, end - start), bool)
-        if causal:
-            mask &= cols[None, :] <= q_pos[:, None]
-        if sliding_window is not None:
-            mask &= cols[None, :] > q_pos[:, None] - sliding_window
-        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
-        m_new = jnp.maximum(m, jnp.max(s, -1, keepdims=True))
-        alpha = jnp.exp(m - m_new)
-        p = jnp.exp(s - m_new)
-        l = alpha * l + jnp.sum(p, -1, keepdims=True)
-        acc = acc * alpha + jnp.einsum("bqhk,bkhd->bqhd", p, vb)
-        m = m_new
+    out_blocks = []
+    for qs in range(0, Sq, bq):
+        qe = min(qs + bq, Sq)
+        qb = qf[:, :, :, qs:qe]
+        rows = jnp.arange(qs, qe, dtype=jnp.int32)
+        acc = jnp.zeros((B, Hkv, group, qe - qs, Dv), jnp.float32)
+        m = jnp.full((B, Hkv, group, qe - qs, 1), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, Hkv, group, qe - qs, 1), jnp.float32)
+        for ks in range(0, Skv, bkv):
+            ke = min(ks + bkv, Skv)
+            if causal and ks > qe - 1:
+                continue   # entirely above the diagonal
+            if sliding_window is not None and ke - 1 <= qs - sliding_window:
+                continue   # entirely left of every row's window
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kf[:, :, ks:ke])
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            needs_mask = (causal and ke - 1 > qs) or (
+                sliding_window is not None
+                and ks <= (qe - 1) - sliding_window)
+            if needs_mask:
+                cols = jnp.arange(ks, ke, dtype=jnp.int32)
+                mask = jnp.ones((qe - qs, ke - ks), bool)
+                if causal:
+                    mask &= cols[None, :] <= rows[:, None]
+                if sliding_window is not None:
+                    mask &= cols[None, :] > rows[:, None] - sliding_window
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, -1, keepdims=True))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new)
+            l = alpha * l + jnp.sum(p, -1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                                           vf[:, :, ks:ke])
+            m = m_new
+        out_blocks.append(acc / jnp.maximum(l, 1e-30))
 
-    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    out = jnp.concatenate(out_blocks, axis=3)          # (B, Hkv, G, Sq, Dv)
+    return out.reshape(B, Hq, Sq, Dv).transpose(0, 2, 1, 3).astype(q.dtype)

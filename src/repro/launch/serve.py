@@ -66,6 +66,16 @@ def main(argv=None):
                     default=[8, 16, 32])
     ap.add_argument("--new-token-choices", type=int, nargs="+",
                     default=[4, 8, 16])
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="decode fast path: tokens per scanned dispatch "
+                         "(1 = per-token stepping)")
+    ap.add_argument("--impl", default="auto",
+                    choices=("auto", "ref", "pallas", "interpret"),
+                    help="attention impl: auto = the decode-attention "
+                         "kernel on TPU, the grouped XLA path elsewhere; "
+                         "ref = the jnp oracle")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable KV-cache donation into the jitted steps")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--params", default=None, help="checkpoint to serve")
     ap.add_argument("--wire", default="fp32", choices=("fp32", "bf16", "int8"),
@@ -87,7 +97,10 @@ def main(argv=None):
     bank = personalized_bank(model, params, args.tenants)
     engine = ServeEngine(model, params, bank,
                          ServeConfig(n_slots=args.slots,
-                                     max_seq=args.max_seq))
+                                     max_seq=args.max_seq,
+                                     decode_block=args.decode_block,
+                                     donate=not args.no_donate,
+                                     impl=args.impl))
     reqs = synthetic_requests(WorkloadConfig(
         n_requests=args.requests,
         mean_interarrival=args.mean_interarrival,

@@ -124,11 +124,15 @@ def make_train_step(model: SplitModel, *, n_clients: int,
 
 def make_prefill_step(model: SplitModel, *, impl: str = "ref",
                       unroll: bool = False, with_wire_bytes: bool = False,
-                      dtype=ACT_DTYPE):
+                      dtype=ACT_DTYPE, donate_cache: bool = False):
     """Prefill crosses both wire boundaries once (forward only); with
     `with_wire_bytes` the step also returns the measured per-link bytes.
     `dtype` is the activation dtype (bf16 production default; the serving
-    engine's logit-equivalence tests run fp32)."""
+    engine's logit-equivalence tests run fp32). `donate_cache` returns the
+    step pre-jitted with the cache argument DONATED — the caller must
+    replace its cache with the returned one and never touch the old pytree
+    (the serving/decode loops already do); in exchange the KV cache updates
+    in place instead of being copied every step."""
     def prefill_step(params, batch, cache):
         out = model.forward(params, batch, route="split", mode="prefill",
                             cache=cache, impl=impl, dtype=dtype,
@@ -136,12 +140,17 @@ def make_prefill_step(model: SplitModel, *, impl: str = "ref",
         if with_wire_bytes:
             return out["logits"][:, -1, :], out["cache"], out["wire_bytes"]
         return out["logits"][:, -1, :], out["cache"]
+    if donate_cache:
+        return jax.jit(prefill_step, donate_argnums=(2,))
     return prefill_step
 
 
 def make_decode_step(model: SplitModel, *, impl: str = "ref",
                      unroll: bool = False, with_wire_bytes: bool = False,
-                     dtype=ACT_DTYPE):
+                     dtype=ACT_DTYPE, donate_cache: bool = False):
+    """One greedy decode token against the KV cache; `donate_cache` as in
+    `make_prefill_step` (the cache pytree is donated and updated in
+    place — the decode hot loop's biggest per-step copy)."""
     def decode_step(params, batch, cache):
         out = model.forward(params, batch, route="split", mode="decode",
                             cache=cache, impl=impl, dtype=dtype,
@@ -151,4 +160,6 @@ def make_decode_step(model: SplitModel, *, impl: str = "ref",
         if with_wire_bytes:
             return next_tok, logits, out["cache"], out["wire_bytes"]
         return next_tok, logits, out["cache"]
+    if donate_cache:
+        return jax.jit(decode_step, donate_argnums=(2,))
     return decode_step

@@ -13,6 +13,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.flash_attention.decode import decode_attention
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.mamba2_scan.ops import mamba2_scan
 from repro.kernels.rwkv6_scan.ops import rwkv6_scan
@@ -220,11 +221,13 @@ def apply_attention(p: Params, cfg: ModelConfig, x: jnp.ndarray, ctx: Ctx,
 
     new_cache = cache
     if ctx.mode == "decode":
+        # decode fast path: single-query cache-read kernel, never the full
+        # flash machinery (see kernels/flash_attention/decode.py)
         new_cache = _cache_write(cache, ("k", "v"), (k, v), sp[:, 0])
-        out = _gqa_attend(
-            q, new_cache["k"], new_cache["v"], ctx, att, window=window,
-            softcap=att.attn_logit_softcap,
-            kv_positions=new_cache["positions"], q_offset=sp[:, 0])
+        out = decode_attention(
+            q, new_cache["k"], new_cache["v"], q_positions=sp[:, 0],
+            kv_positions=new_cache["positions"], sliding_window=window,
+            softcap=att.attn_logit_softcap, impl=ctx.impl)
     else:
         out = _gqa_attend(q, k, v, ctx, att, window=window,
                           softcap=att.attn_logit_softcap, causal=ctx.causal)
@@ -284,8 +287,8 @@ def _apply_mla(p: Params, cfg: ModelConfig, x, h, ctx: Ctx, cache, window):
             (*new_cache["kr"].shape[:2], att.n_heads, m.qk_rope_head_dim))
         k = jnp.concatenate([k_nope, kr], -1)
         qfull = jnp.concatenate([q_nope, q_rope], -1)
-        out = flash_attention(
-            qfull, k, v, causal=True, q_offset=sp[:, 0],
+        out = decode_attention(
+            qfull, k, v, q_positions=sp[:, 0],
             kv_positions=new_cache["positions"], sliding_window=window,
             softcap=att.attn_logit_softcap, scale=scale, impl=ctx.impl)
     else:

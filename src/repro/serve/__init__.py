@@ -5,11 +5,13 @@ See ARCHITECTURE.md §Serving engine and `launch/serve.py` for the CLI.
 from repro.serve.bank import TenantBank
 from repro.serve.engine import Finished, ServeConfig, ServeEngine
 from repro.serve.steps import (make_batched_decode_step,
+                               make_multi_decode_step,
                                make_tenant_prefill_step)
 from repro.serve.workload import Request, WorkloadConfig, synthetic_requests
 
 __all__ = [
     "TenantBank", "ServeConfig", "ServeEngine", "Finished",
-    "make_batched_decode_step", "make_tenant_prefill_step",
+    "make_batched_decode_step", "make_multi_decode_step",
+    "make_tenant_prefill_step",
     "Request", "WorkloadConfig", "synthetic_requests",
 ]

@@ -27,6 +27,7 @@ cross-checked against `core.comm.serve_comm_breakdown` in tests and CI.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -35,11 +36,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.split import SplitModel
+from repro.runtime.boundary import BOUNDARY_NAMES
 from repro.runtime.meter import TrafficMeter
 from repro.serve.bank import TenantBank
 from repro.serve.steps import (make_batched_decode_step,
+                               make_multi_decode_step,
                                make_tenant_prefill_step)
 from repro.serve.workload import Request
+
+_DONATION_WARNING_FILTERED = False
+
+
+def _quiet_cpu_donation_warning() -> None:
+    """On a backend without donation jax falls back to a copy and warns
+    once per compile. That is the engine's EXPECTED state on CPU (tests,
+    CI), so suppress exactly that diagnostic — once per process, and only
+    when a donating engine is actually constructed on such a backend
+    (never at import, never on TPU/GPU, no duplicate filter entries)."""
+    global _DONATION_WARNING_FILTERED
+    if not _DONATION_WARNING_FILTERED and jax.default_backend() == "cpu":
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        _DONATION_WARNING_FILTERED = True
 
 
 @dataclass(frozen=True)
@@ -49,6 +67,13 @@ class ServeConfig:
     #                           + generated tokens must fit)
     max_queue: int = 64       # admission control: pending-request cap
     prefills_per_step: int = 2  # joins per engine step (prefill/decode mix)
+    decode_block: int = 1     # decode fast path: tokens per dispatch — one
+    #                           lax.scan of up to this many decode steps per
+    #                           engine step (power-of-two buckets keep the
+    #                           jit-cache count bounded); 1 = per-token
+    donate: bool = True       # donate the KV-cache pytrees into the jitted
+    #                           steps so they update in place (no-op copy
+    #                           fallback on backends without donation)
     dtype: Any = jnp.float32
     impl: str = "ref"
 
@@ -100,11 +125,24 @@ class ServeEngine:
         self._queue: List[Request] = []
         self._t_enqueue: Dict[int, float] = {}      # rid -> submit time
 
+        # The blank prefill cache is REUSED every admission, so the prefill
+        # step donates nothing; the shared cache pytree is donated into the
+        # decode steps and the slot scatter so it updates in place.
+        donate = (6,) if cfg.donate else ()
+        if cfg.donate:
+            _quiet_cpu_donation_warning()
         self._prefill = jax.jit(make_tenant_prefill_step(
             model, impl=cfg.impl, dtype=cfg.dtype))
         self._decode = jax.jit(make_batched_decode_step(
-            model, impl=cfg.impl, dtype=cfg.dtype))
-        self._write_slot = jax.jit(model.cache_write_slot)
+            model, impl=cfg.impl, dtype=cfg.dtype), donate_argnums=donate)
+        self._multi: Dict[int, Any] = {}    # decode_block bucket -> jit
+        self._write_slot = model.jit_slot_writer(donate=cfg.donate)
+
+        # measured wire bytes accumulate ON DEVICE (traced scalars chained
+        # with jnp.add, never synced per token) and fold into the host-side
+        # meter once per flush — stats()/reset_stats() — instead of forcing
+        # a device->host transfer every decode step.
+        self._wire_acc = self._zero_wire()
 
         # step accounting
         self.step_idx = 0
@@ -113,6 +151,26 @@ class ServeEngine:
         self.rejected = 0
         self.tokens_out = 0
         self._occupancy_sum = 0.0
+
+    # -------------------------------------------------------------- wire
+    @staticmethod
+    def _zero_wire() -> Dict[str, jnp.ndarray]:
+        return {name: jnp.float32(0.0) for name in BOUNDARY_NAMES}
+
+    def _absorb_wire(self, wb) -> None:
+        """Chain a step's byte counters onto the device-side accumulator —
+        a lazy device add, NO host sync (the old per-token float() absorb
+        blocked the decode loop on a device->host transfer every step)."""
+        self._wire_acc = {k: self._wire_acc[k] + wb[k]
+                         for k in self._wire_acc}
+
+    def _flush_wire(self) -> None:
+        """Fold the device-side accumulator into the host meter (one sync
+        per flush — called from stats()/reset_stats(), not per token)."""
+        vals = {k: float(v) for k, v in self._wire_acc.items()}
+        if any(vals.values()):
+            self.meter.absorb(vals)
+        self._wire_acc = self._zero_wire()
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> bool:
@@ -157,7 +215,7 @@ class ServeEngine:
             self.shared, tail, prompt, batch, self._blank)
         self.cache = self._write_slot(self.cache, slot_cache,
                                       jnp.int32(slot))
-        self.meter.absorb({k: float(v) for k, v in wb.items()})
+        self._absorb_wire(wb)
         self.prefill_count += 1
         self.tokens_out += 1
 
@@ -185,9 +243,29 @@ class ServeEngine:
             logits=(np.stack(st.logits) if st.logits else None))
 
     # -------------------------------------------------------------- step
+    def _decode_bucket(self, max_remaining: int) -> int:
+        """Tokens to decode in one dispatch: the largest power of two <=
+        min(decode_block, max slot budget) — power-of-two buckets bound the
+        number of compiled multi-step variants at log2(decode_block)."""
+        n = min(self.cfg.decode_block, max_remaining)
+        return 1 << (max(1, n).bit_length() - 1)
+
+    def _get_multi(self, n_steps: int):
+        fn = self._multi.get(n_steps)
+        if fn is None:
+            donate = (6,) if self.cfg.donate else ()
+            fn = jax.jit(make_multi_decode_step(
+                self.model, n_steps, impl=self.cfg.impl,
+                dtype=self.cfg.dtype, with_logits=self.collect_logits),
+                donate_argnums=donate)
+            self._multi[n_steps] = fn
+        return fn
+
     def step(self) -> List[Finished]:
         """One engine step: admit up to `prefills_per_step` queued requests
-        into free slots, then one batched decode over every occupied slot.
+        into free slots, then one batched decode over every occupied slot —
+        a single token, or (decode fast path) up to `decode_block` tokens
+        in one scanned dispatch, with retirement deferred to scan exit.
         Returns the requests that completed during this step."""
         done: List[Finished] = []
         admitted = 0
@@ -198,33 +276,49 @@ class ServeEngine:
             if fin is not None:
                 done.append(fin)
 
-        active = np.array([s is not None for s in self._slots], bool)
-        if active.any():
-            self._occupancy_sum += active.sum() / self.cfg.n_slots
-            tok, logits, self.cache, wb = self._decode(
+        remaining = np.array(
+            [0 if s is None else s.req.max_new - len(s.tokens)
+             for s in self._slots], np.int32)
+        if not remaining.any():
+            self.step_idx += 1
+            return done
+        n_eff = self._decode_bucket(int(remaining.max()))
+        if n_eff <= 1:
+            toks, logits, self.cache, wb = self._decode(
                 self.shared, self.bank.tails,
                 jnp.asarray(self._tenants), jnp.asarray(self._tokens),
-                jnp.asarray(self._pos), jnp.asarray(active, jnp.float32),
-                self.cache)
-            self.meter.absorb({k: float(v) for k, v in wb.items()})
-            self.decode_steps += 1
-            tok_np = np.asarray(tok)
-            logits_np = np.asarray(logits) if self.collect_logits else None
-            for slot, st in enumerate(self._slots):
-                if st is None:
-                    continue
-                st.tokens.append(int(tok_np[slot]))
+                jnp.asarray(self._pos),
+                jnp.asarray(remaining > 0, jnp.float32), self.cache)
+            toks, logits = toks[None], logits[None]     # (1, S[, V])
+        else:
+            toks, logits, self.cache, wb = self._get_multi(n_eff)(
+                self.shared, self.bank.tails,
+                jnp.asarray(self._tenants), jnp.asarray(self._tokens),
+                jnp.asarray(self._pos), jnp.asarray(remaining), self.cache)
+        self._absorb_wire(wb)
+        self.decode_steps += n_eff
+        for t in range(n_eff):
+            self._occupancy_sum += ((remaining > t).sum()
+                                    / self.cfg.n_slots)
+        tok_np = np.asarray(toks)
+        logits_np = np.asarray(logits) if self.collect_logits else None
+        for slot, st in enumerate(self._slots):
+            if st is None:
+                continue
+            take = min(n_eff, int(remaining[slot]))
+            for t in range(take):
+                st.tokens.append(int(tok_np[t, slot]))
                 if self.collect_logits:
-                    st.logits.append(logits_np[slot])
-                self.tokens_out += 1
+                    st.logits.append(logits_np[t, slot])
                 st.next_pos += 1
-                self._tokens[slot] = tok_np[slot]
-                self._pos[slot] = st.next_pos
-                if len(st.tokens) >= st.req.max_new:
-                    done.append(self._finish(st))
-                    self._slots[slot] = None
-                    self._free.append(slot)
-        self.step_idx += 1
+            self.tokens_out += take
+            self._tokens[slot] = tok_np[take - 1, slot]
+            self._pos[slot] = st.next_pos
+            if len(st.tokens) >= st.req.max_new:
+                done.append(self._finish(st))
+                self._slots[slot] = None
+                self._free.append(slot)
+        self.step_idx += n_eff
         return done
 
     # ------------------------------------------------------------- reset
@@ -236,6 +330,7 @@ class ServeEngine:
         if not self.idle:
             raise RuntimeError("reset_stats with requests in flight")
         self.meter = TrafficMeter()
+        self._wire_acc = self._zero_wire()
         self.step_idx = 0
         self.decode_steps = 0
         self.prefill_count = 0
@@ -266,6 +361,7 @@ class ServeEngine:
 
     def stats(self, finished: List[Finished], wall_s: float,
               ) -> Dict[str, Any]:
+        self._flush_wire()
         lat = sorted(f.latency_s for f in finished) or [0.0]
 
         def pct(p):

@@ -11,6 +11,14 @@ Two step shapes, both crossing the PR-1 wire boundaries:
   (shared parameters), then the tail is vmapped over slots with each slot's
   TENANT tail gathered from the bank — heterogeneous tenants, one compiled
   function.
+* `make_multi_decode_step` — the decode FAST PATH: `n_steps` tokens for
+  every occupied slot inside ONE `lax.scan` over the same per-token body,
+  so the host pays one dispatch (and one device->host token sync) per
+  n_steps tokens instead of per token. Slot retirement is deferred to scan
+  exit: a slot with fewer than n_steps tokens remaining keeps computing
+  (shape stability — its cache rows are wholly overwritten at the next
+  allocation) but its wire bytes stop counting the moment it retires,
+  via the per-step `remaining > t` activity mask.
 
 Wire accounting: prefill transmits exactly the request's smashed tensor;
 decode transmits per OCCUPIED row (`Boundary.transmit(rows=n_active)`) —
@@ -23,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.split import SplitModel
+from repro.runtime.boundary import BOUNDARY_NAMES
 
 
 def make_tenant_prefill_step(model: SplitModel, *, impl: str = "ref",
@@ -90,3 +99,44 @@ def make_batched_decode_step(model: SplitModel, *, impl: str = "ref",
         return next_tok, logits, new_cache, {"head_body": b_hb,
                                              "body_tail": b_bt}
     return decode_step
+
+
+def make_multi_decode_step(model: SplitModel, n_steps: int, *,
+                           impl: str = "ref", dtype=jnp.float32,
+                           with_logits: bool = True):
+    """multi_decode_step(shared, bank_tails, tenant_ids, tokens, pos,
+    remaining, cache) -> (toks (n_steps, S), logits (n_steps, S, V) or
+    None, cache, wire_bytes).
+
+    Runs `n_steps` greedy decode tokens for every slot inside one lax.scan
+    over the EXACT per-token body `make_batched_decode_step` builds, so the
+    fast path is logit-identical to per-token stepping by construction.
+    `remaining` (S,) int32 is each slot's outstanding token budget (0 for
+    idle slots): slot i is wire-active for the first remaining[i] scan
+    steps and a dead weight (computed, discarded, unmetered) after — the
+    engine discards trailing tokens and retires the slot at scan exit.
+
+    `with_logits=False` keeps the logits out of the scan outputs: the
+    engine only collects them on request, and stacking (n_steps, S, V) per
+    dispatch would multiply the hot path's live logits memory by n_steps
+    for a tensor the host immediately drops."""
+    decode_step = make_batched_decode_step(model, impl=impl, dtype=dtype)
+
+    def multi_decode_step(shared, bank_tails, tenant_ids, tokens, pos,
+                          remaining, cache):
+        def body(carry, t):
+            tokens, pos, cache, acc = carry
+            active = (remaining > t).astype(jnp.float32)
+            tok, logits, cache, wb = decode_step(
+                shared, bank_tails, tenant_ids, tokens, pos, active, cache)
+            acc = {k: acc[k] + wb[k] for k in acc}
+            ys = (tok, logits) if with_logits else tok
+            return (tok, pos + 1, cache, acc), ys
+
+        zero = {name: jnp.float32(0.0) for name in BOUNDARY_NAMES}
+        (_, _, cache, wb), ys = jax.lax.scan(
+            body, (tokens, pos, cache, zero),
+            jnp.arange(n_steps, dtype=jnp.int32))
+        toks, logits = ys if with_logits else (ys, None)
+        return toks, logits, cache, wb
+    return multi_decode_step
