@@ -28,6 +28,8 @@ SUITES = {
               "serving engine tok/s + latency"),
     "decode": ("benchmarks.decode_throughput",
                "decode fast path: scan stepping + decode attention"),
+    "secure": ("benchmarks.secure_agg",
+               "privacy engine: secure-agg overhead + mask kernel"),
     "accuracy": ("benchmarks.accuracy", "Table 3 / Fig 4"),
     "prompt_length": ("benchmarks.prompt_length", "Fig 5"),
     "ablation_local_loss": ("benchmarks.ablation_local_loss", "Fig 6"),

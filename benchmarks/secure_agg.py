@@ -1,0 +1,81 @@
+"""Secure-aggregation overhead benchmarks (privacy engine).
+
+Two headline numbers, both machine-independent ratios:
+
+  secure_agg/secure_speedup — one full phase-3 aggregation, masked ring
+      path vs clear fedavg_partial on the SAME cohort tree (with a
+      dropout, so the secure arm pays mask generation AND escrow
+      recovery). This is < 1 by construction: the regression gate pins it
+      as the ceiling on how much the privacy engine may cost.
+  secure_mask/fused_speedup — one client's upload: the fused single-pass
+      masked-encode (mask streams folded into the accumulator one at a
+      time, O(n) memory — the shape of the Pallas kernel) vs the naive
+      two-pass that materializes all (J, n) mask streams before summing.
+      Floored at 1.0: fusing must never lose to materialization.
+
+On CPU both arms run the XLA ref path (the Pallas kernel itself targets
+TPU and is validated, not timed, here — same policy as kernel_microbench).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, row, save, time_fn
+from repro.kernels.secure_mask import ref
+from repro.kernels.secure_mask.ops import ring_size
+from repro.privacy.secure_agg import ClearAggregator, SecureAggregator
+
+
+def run():
+    out, lines = {}, []
+    key = jax.random.PRNGKey(0)
+    iters = 3 if FAST else 5
+
+    # ---- full-round aggregation: clear vs masked (K clients, 1 dropout)
+    K = 8
+    n_tail = (1 << 14) if FAST else (1 << 16)
+    tree = {"tail": {"w": jax.random.normal(key, (K, n_tail))},
+            "prompt": jax.random.normal(jax.random.fold_in(key, 1),
+                                        (K, 16, 64))}
+    fb = jax.tree.map(lambda x: jnp.zeros_like(x[0]), tree)
+    w = jnp.arange(1.0, K + 1.0).at[2].set(0.0)   # client 2 dropped
+    clear_agg, secure_agg = ClearAggregator(), SecureAggregator(impl="ref")
+    clear = jax.jit(lambda t, w, r: clear_agg.aggregate(t, w, fb, r)[0])
+    secure = jax.jit(lambda t, w, r: secure_agg.aggregate(t, w, fb, r)[0])
+    t_clear = time_fn(clear, tree, w, jnp.int32(1), iters=iters)
+    t_secure = time_fn(secure, tree, w, jnp.int32(1), iters=iters)
+    out["secure_agg"] = {"ref_us": t_clear, "secure_us": t_secure}
+    lines.append(row("privacy/secure_agg", t_secure,
+                     f"clear={t_clear:.0f}us "
+                     f"overhead={t_secure / t_clear:.1f}x"))
+
+    # ---- one client's upload: fused single-pass vs naive materialization
+    n = ring_size((1 << 18) if FAST else (1 << 20))
+    J = K - 1
+    x = jax.random.normal(key, (n,), jnp.float32)
+    seeds = jax.random.bits(key, (J,), jnp.uint32)
+    signs = jnp.where(jnp.arange(J) % 2 == 0, 1, -1).astype(jnp.int32)
+
+    fused = jax.jit(lambda x, s, g: ref.masked_encode(x, s, g))
+
+    def naive_fn(x, s, g):
+        masks = jax.vmap(lambda si: ref.mask_stream(si, n))(s)   # (J, n)!
+        signed = jnp.where(g[:, None] < 0, jnp.uint32(0) - masks, masks)
+        signed = jnp.where(g[:, None] == 0, jnp.uint32(0), signed)
+        return ref.encode(x) + signed.sum(0)
+
+    naive = jax.jit(naive_fn)
+    t_fused = time_fn(fused, x, seeds, signs, iters=iters)
+    t_naive = time_fn(naive, x, seeds, signs, iters=iters)
+    out["secure_mask"] = {"ref_us": t_naive, "fused_us": t_fused}
+    lines.append(row("privacy/secure_mask_fused", t_fused,
+                     f"naive={t_naive:.0f}us "
+                     f"speedup={t_naive / t_fused:.2f}x"))
+
+    save("secure_agg", out)
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -86,7 +86,22 @@ def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
 
 
 def load_latest(ckpt_dir: str) -> Optional[Any]:
-    """Load the newest checkpoint in `ckpt_dir`, or None if there is none.
-    The resumable-training entry point: engines call this on restart."""
-    path = latest_checkpoint(ckpt_dir)
-    return None if path is None else load_checkpoint(path)
+    """Load the newest INTACT checkpoint in `ckpt_dir`, or None when the
+    directory holds none. The resumable-training entry point: engines call
+    this on restart.
+
+    Writes are atomic (tmp + rename), so a torn tail file should never
+    exist — but a copied-in or disk-damaged npz can still fail to parse,
+    and dying on it would leave the run unresumable even though older
+    intact checkpoints sit right next to it. A corrupt tail is therefore
+    skipped with a warning and the next-newest checkpoint loads instead
+    (the engine then replays the lost rounds deterministically)."""
+    import sys
+    import zipfile
+    for path in reversed(all_checkpoints(ckpt_dir)):
+        try:
+            return load_checkpoint(path)
+        except (zipfile.BadZipFile, ValueError, EOFError, OSError) as e:
+            print(f"warning: skipping corrupt checkpoint {path}: {e}",
+                  file=sys.stderr)
+    return None

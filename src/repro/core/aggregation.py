@@ -11,11 +11,28 @@ import jax
 import jax.numpy as jnp
 
 
-def fedavg(client_trees, weights: jnp.ndarray):
+def fedavg(client_trees, weights: jnp.ndarray, fallback=None):
     """client_trees: pytree with leading client axis K on every leaf.
-    weights: (K,) sample counts n_k; normalized internally."""
+    weights: (K,) sample counts n_k; normalized internally.
+
+    An all-zero weight vector has no defined mean — aligned with
+    `fedavg_partial`'s explicit semantics: pass `fallback` (a tree without
+    the client axis) to return it in that case, or, with no fallback, a
+    concretely all-zero `weights` raises instead of silently emitting the
+    near-zero params the old epsilon-division produced. (Traced weights
+    can't be inspected — pass `fallback` when the zero case is reachable
+    under jit, as `fedavg_partial` always does.)"""
     w = weights.astype(jnp.float32)
-    w = w / jnp.maximum(w.sum(), 1e-9)
+    total = w.sum()
+    if fallback is None and not isinstance(total, jax.core.Tracer):
+        if float(total) <= 0:
+            raise ValueError(
+                "fedavg weights sum to 0 (every client weightless) — the "
+                "mean is undefined; pass fallback= to return pre-round "
+                "params instead")
+    if fallback is not None:
+        return fedavg_partial(client_trees, weights, fallback)
+    w = w / jnp.maximum(total, 1e-9)
 
     def mean(x):
         wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
@@ -51,3 +68,19 @@ def broadcast_to_clients(tree, k: int):
     """Replicate aggregated params back to K per-client copies."""
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), tree)
+
+
+def get_aggregator(secure: bool = False, **kw):
+    """The phase-3 aggregation path as a pluggable object.
+
+    secure=False -> ClearAggregator (bit-identical to `fedavg_partial`,
+    the seed behavior); secure=True -> the privacy engine's masked
+    SecureAggregator (kwargs: frac_bits, impl, seed — see
+    repro/privacy/secure_agg.py). Imported lazily so the core layer has no
+    hard dependency on the privacy subsystem."""
+    from repro.privacy.secure_agg import ClearAggregator, SecureAggregator
+    if secure:
+        return SecureAggregator(**kw)
+    if kw:
+        raise ValueError(f"clear aggregation takes no options, got {kw}")
+    return ClearAggregator()

@@ -114,6 +114,40 @@ def sfprompt_comm_breakdown_partial(c: CostInputs, *, transmit_sum: float,
             "params": params_each * (k_down + n_uploads)}
 
 
+def secure_agg_breakdown(*, n_trainable: int, param_nbytes: float, K: int,
+                         n_uploads: float,
+                         n_dropped: Optional[float] = None,
+                         ) -> Dict[str, float]:
+    """Analytical wire bytes of one masked-secure-aggregation round, keyed
+    like the TrafficMeter — the exact counterpart of what
+    `privacy.SecureAggregator` pushes through its runtime Boundaries
+    (tests pin measured vs this to <= 5%; exact in practice).
+
+      params: the fp32 (tail + prompt) broadcast DOWN to all K sampled
+              clients, plus each SURVIVOR's uint32 ring upload — the
+              flattened trainable count padded to the mask kernel's lane
+              multiple (`ring_size`), 4 bytes per ring element.
+      secure: simulated-DH key agreement (each of the K clients sends its
+              pubkey and receives the K-1 others: K^2 * PK_BYTES total)
+              plus dropout recovery (each survivor reveals its escrowed
+              pair seed with each dropped client: n_up * n_drop seeds).
+
+    `n_trainable` is the UNPADDED flattened (tail + prompt) element count;
+    `param_nbytes` the fp32 byte size of that tree (the downlink payload).
+    """
+    from repro.kernels.secure_mask.ops import ring_size
+    from repro.privacy.fixed_point import RING_BYTES
+    from repro.privacy.masking import PK_BYTES, SEED_BYTES
+    n_pad = ring_size(n_trainable)
+    if n_dropped is None:
+        n_dropped = K - n_uploads
+    return {
+        "params": K * param_nbytes + n_uploads * n_pad * RING_BYTES,
+        "secure": (K * K * PK_BYTES
+                   + n_uploads * n_dropped * SEED_BYTES),
+    }
+
+
 def serve_comm_breakdown(wire, *, d_model: int, soft_prompt_len: int,
                          requests) -> Dict[str, float]:
     """Analytical SERVING wire bytes per boundary for a request trace.

@@ -60,3 +60,27 @@ def local_epochs(model: SplitModel, head_p, trainable, opt: Optimizer,
         one_epoch, (trainable, opt_state, jnp.float32(0.0)),
         None, length=n_epochs)
     return trainable, opt_state, acc / (n_epochs * nb)
+
+
+def dp_clip_and_noise(trainable, reference, key, *, l2_clip: float,
+                      noise_multiplier: float):
+    """DP-SGD on ONE client's round update (vmapped over clients by the
+    protocol, like everything above).
+
+    The privatized quantity is the client's DELTA against the broadcast
+    pre-round globals — clipping absolute params would destroy them, and
+    the delta is what the server aggregates. Per DP-SGD: scale the delta to
+    global L2 norm <= l2_clip, add N(0, (noise_multiplier * l2_clip)^2)
+    per coordinate, and rebuild the params the client uploads. Returns
+    (privatized trainable, pre-clip delta norm for diagnostics)."""
+    # lazy like aggregation.get_aggregator: the core layer only touches
+    # the privacy subsystem when the DP path is actually taken
+    from repro.privacy.dp import clip_tree, gaussian_noise_tree
+    delta = jax.tree.map(
+        lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+        trainable, reference)
+    delta, norm = clip_tree(delta, l2_clip)
+    noise = gaussian_noise_tree(key, delta, noise_multiplier * l2_clip)
+    return jax.tree.map(
+        lambda ref, d, n: (ref.astype(jnp.float32) + d + n)
+        .astype(ref.dtype), reference, delta, noise), norm

@@ -23,11 +23,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import losses, pruning
-from repro.core.aggregation import broadcast_to_clients, fedavg_partial
-from repro.core.local_update import local_epochs
+from repro.core.aggregation import broadcast_to_clients, get_aggregator
+from repro.core.local_update import dp_clip_and_noise, local_epochs
 from repro.core.split import SplitModel
 from repro.optim import Optimizer, adamw, apply_updates, sgd
-from repro.runtime.meter import TrafficMeter
+from repro.privacy.dp import DP_SEED, PrivacyAccountant
+from repro.runtime.meter import SECURE, TrafficMeter
 
 Params = Dict[str, Any]
 
@@ -50,6 +51,11 @@ class ProtocolConfig:
     return_client_trainable: bool = False
     # ^ also return each client's post-round (tail, prompt) BEFORE FedAvg —
     #   the fed engine stores these as personalized tails in the Population
+    dp_clip: float = 0.0             # DP-SGD L2 clip on the client's round
+    #   delta (0 disables the DP path entirely)
+    dp_noise_multiplier: float = 0.0  # Gaussian noise as a multiple of the
+    #   clip; > 0 activates the zCDP accountant
+    dp_delta: float = 1e-5           # delta of the reported (eps, delta)
 
 
 def make_optimizer(pcfg: ProtocolConfig, lr: float) -> Optimizer:
@@ -61,11 +67,26 @@ def make_optimizer(pcfg: ProtocolConfig, lr: float) -> Optimizer:
 class SFPromptTrainer:
     supports_partial = True   # round() accepts a participation dict
 
-    def __init__(self, model: SplitModel, pcfg: ProtocolConfig):
+    def __init__(self, model: SplitModel, pcfg: ProtocolConfig,
+                 aggregator=None):
         self.model = model
         self.pcfg = pcfg
         self.opt_local = make_optimizer(pcfg, pcfg.lr_local)
         self.opt_split = make_optimizer(pcfg, pcfg.lr_split)
+        # pluggable phase-3 aggregation: default is the clear path,
+        # bit-identical to the seed's fedavg_partial; pass
+        # aggregation.get_aggregator(secure=True) for masked secure agg
+        self.aggregator = aggregator or get_aggregator()
+        if pcfg.dp_noise_multiplier > 0 and pcfg.dp_clip <= 0:
+            raise ValueError(
+                "dp_noise_multiplier > 0 needs dp_clip > 0: the Gaussian "
+                "noise is calibrated to the clip (sensitivity)")
+        # zCDP ledger across rounds — only a noised mechanism has a
+        # finite epsilon to account for
+        self.accountant = (
+            PrivacyAccountant(noise_multiplier=pcfg.dp_noise_multiplier,
+                              l2_clip=pcfg.dp_clip, delta=pcfg.dp_delta)
+            if pcfg.dp_noise_multiplier > 0 else None)
         self.meter = TrafficMeter()   # measured bytes across rounds
         self.last_client_trainable = None   # per-client (tail, prompt) of
         # the most recent round, populated iff pcfg.return_client_trainable
@@ -220,24 +241,53 @@ class SFPromptTrainer:
             # of its phase-2 traffic — scale the measured per-client bytes
             metrics[f"wire/{name}_bytes"] = (per_client * transmit).sum()
 
+        # ---- DP-SGD on the client update: clip the round delta against
+        # the broadcast globals, add calibrated Gaussian noise — BEFORE the
+        # server (or the masked aggregator) ever sees the upload
+        if pcfg.dp_clip > 0:
+            reference = broadcast_to_clients(
+                {"tail": params["tail"], "prompt": params["prompt"]}, K)
+            dp_keys = jax.random.split(
+                jax.random.fold_in(jax.random.PRNGKey(DP_SEED),
+                                   state["round"]), K)
+
+            def dp_one(tr, ref, dk):
+                return dp_clip_and_noise(
+                    tr, ref, dk, l2_clip=pcfg.dp_clip,
+                    noise_multiplier=pcfg.dp_noise_multiplier)
+
+            trainable, dp_norm = jax.vmap(dp_one)(trainable, reference,
+                                                  dp_keys)
+            metrics["dp/delta_norm"] = dp_norm.mean()
+
         # ---- Phase 3: participation-corrected weighted FedAvg of
-        # (tail, prompt); dropped clients are excluded, a fully-lost round
-        # falls back to the pre-round globals
+        # (tail, prompt) through the pluggable aggregator; dropped clients
+        # are excluded, a fully-lost round falls back to the pre-round
+        # globals. The secure path uploads masked uint32 ring tensors the
+        # server cannot invert (see repro/privacy/secure_agg.py).
         aggregate = participation["aggregate"].astype(jnp.float32)
         weights = jnp.float32(keep) * aggregate
-        agg = fedavg_partial(trainable, weights,
-                             {"tail": params["tail"],
-                              "prompt": params["prompt"]})
+        fallback = {"tail": params["tail"], "prompt": params["prompt"]}
+        agg, agg_wire = self.aggregator.aggregate(trainable, weights,
+                                                  fallback, state["round"])
         new_params = dict(params)
         new_params["tail"] = agg["tail"]
         new_params["prompt"] = agg["prompt"]
-        # (tail, prompt) travel server->client for all K at round start and
-        # client->server only for the clients that survived to aggregate
         n_up = (aggregate > 0).sum()
-        metrics["wire/params_bytes"] = (K + n_up) * jnp.float32(sum(
+        param_bytes = jnp.float32(sum(
             x.size * x.dtype.itemsize
-            for x in jax.tree.leaves({"tail": params["tail"],
-                                      "prompt": params["prompt"]})))
+            for x in jax.tree.leaves(fallback)))
+        if agg_wire:
+            # secure path: fp32 broadcast down to all K, metered masked
+            # uploads up (ring padding included), key-agreement + escrow
+            # reveals on their own stream
+            metrics["wire/params_bytes"] = (K * param_bytes
+                                            + agg_wire["params_up"])
+            metrics[f"wire/{SECURE}_bytes"] = agg_wire[SECURE]
+        else:
+            # clear path: (tail, prompt) travel server->client for all K at
+            # round start and client->server only for the survivors
+            metrics["wire/params_bytes"] = (K + n_up) * param_bytes
         metrics["cohort/active"] = n_up
         metrics["cohort/transmit_sum"] = transmit.sum()
 
@@ -261,6 +311,11 @@ class SFPromptTrainer:
                                                  participation, init_tails)
         self.last_client_trainable = extras.get("trainable")
         metrics = {k: float(v) for k, v in metrics.items()}
+        if self.accountant is not None:
+            # one Gaussian release of each sampled client's update per
+            # round — the ledger tracks the per-client (local-model) view
+            self.accountant.spend()
+            metrics["dp/epsilon"] = self.accountant.epsilon()
         self.meter.absorb({k.removeprefix("wire/").removesuffix("_bytes"): v
                            for k, v in metrics.items()
                            if k.startswith("wire/")},

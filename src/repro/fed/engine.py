@@ -146,6 +146,11 @@ class FederatedEngine:
             parts.append(repr(getattr(model, "split", None)))
             parts.append(repr(getattr(model, "cfg", None)))
             parts.append(model.wire.describe())
+        aggregator = getattr(self.trainer, "aggregator", None)
+        if aggregator is not None:
+            # a clear-agg checkpoint resumed under secure agg (or with
+            # different masking params) would replay different rounds
+            parts.append(aggregator.describe())
         return np.int64(zlib.crc32("|".join(parts).encode()))
 
     def _run_state(self) -> Dict[str, Any]:
@@ -162,6 +167,12 @@ class FederatedEngine:
         meter = getattr(self.trainer, "meter", None)
         if meter is not None:
             state["meter"] = meter.state_dict()
+        accountant = getattr(self.trainer, "accountant", None)
+        if accountant is not None:
+            # the zCDP ledger rides the checkpoint as float64 scalars —
+            # npz round-trips them byte-identically, so the resumed run's
+            # epsilon is exactly the uninterrupted run's
+            state["privacy"] = accountant.state_dict()
         return state
 
     def save(self, ckpt_dir: str, *, keep_last: Optional[int] = 3) -> str:
@@ -205,6 +216,14 @@ class FederatedEngine:
         meter = getattr(self.trainer, "meter", None)
         if meter is not None and "meter" in run:
             meter.load_state_dict(_flatten_numeric(run["meter"]))
+        accountant = getattr(self.trainer, "accountant", None)
+        if accountant is not None:
+            if "privacy" not in run:
+                raise ValueError(
+                    "DP trainer resumed from a checkpoint with no privacy "
+                    "ledger — the pre-checkpoint releases would be "
+                    "unaccounted; resume with the original DP flags")
+            accountant.load_state_dict(run["privacy"])
         self.cohort_history = []
         return True
 

@@ -11,6 +11,8 @@ Kernels:
   rwkv6_scan      — RWKV-6 data-dependent-decay recurrence, chunked (GLA form)
   mamba2_scan     — Mamba-2 SSD chunked scan (matmul form for the MXU)
   quant           — int8 stochastic quantize/dequantize for the wire codecs
+  secure_mask     — fused fixed-point encode + pairwise PRG mask-add for
+                    masked secure aggregation (privacy engine)
 """
 from jax.experimental.pallas import tpu as _pltpu
 

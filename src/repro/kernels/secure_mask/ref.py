@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for the fused secure-aggregation mask op.
+
+One client's secure upload is its trainable delta fixed-point-encoded into
+the uint32 ring with the client's summed pairwise mask folded in:
+
+    upload = encode(x) + sum_j sign_j * PRG(seed_j)      (mod 2^32)
+
+Fixed point: two's-complement at `frac_bits` fractional bits, saturating at
+the int32 range edge on encode; ring arithmetic wraps mod 2^32 (uint32
+overflow is DEFINED wraparound in XLA, which is exactly the ring the
+masking algebra needs). decode() recenters: values >= 2^31 are negative.
+
+The PRG here is jax.random.bits (threefry) keyed on the pair seed — NOT the
+same bit stream as the Pallas kernel's pltpu PRNG, by design. Mask bits
+never need to match across impls, only to CANCEL within one impl: the
+cohort's ring sum (everything the server ever decodes) is bit-identical
+across impls because the masks vanish from it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FRAC_BITS = 16          # default fixed-point precision: ~1.5e-5 resolution
+RING_EDGE = 2.0 ** 31   # signed-range boundary of the uint32 ring
+# saturation bound: the largest f32 BELOW 2^31 — clipping at 2^31 - 1
+# would round the bound up to exactly 2^31 in f32 and flip a saturated
+# positive value into the negative ring half
+SAT = RING_EDGE - 128
+
+
+def encode(x: jnp.ndarray, frac_bits: int = FRAC_BITS) -> jnp.ndarray:
+    """float -> uint32 two's-complement fixed point (saturating)."""
+    q = jnp.round(x.astype(jnp.float32) * (2.0 ** frac_bits))
+    q = jnp.clip(q, -SAT, SAT)
+    mag = jnp.abs(q).astype(jnp.uint32)
+    return jnp.where(q < 0, jnp.uint32(0) - mag, mag)
+
+
+def decode(u: jnp.ndarray, frac_bits: int = FRAC_BITS) -> jnp.ndarray:
+    """uint32 ring value -> f32, recentered (u >= 2^31 reads negative)."""
+    neg = u >= jnp.uint32(RING_EDGE)
+    mag = jnp.where(neg, jnp.uint32(0) - u, u).astype(jnp.float32)
+    return jnp.where(neg, -mag, mag) / (2.0 ** frac_bits)
+
+
+def mask_stream(seed, n: int) -> jnp.ndarray:
+    """The (n,) uint32 PRG stream of one pairwise seed (ref impl)."""
+    return jax.random.bits(jax.random.PRNGKey(seed), (n,), jnp.uint32)
+
+
+def _signed(m: jnp.ndarray, sign) -> jnp.ndarray:
+    m = jnp.where(sign < 0, jnp.uint32(0) - m, m)
+    return jnp.where(sign == 0, jnp.uint32(0), m)
+
+
+def summed_mask(seeds: jnp.ndarray, signs: jnp.ndarray, n: int) -> jnp.ndarray:
+    """sum_j sign_j * PRG(seed_j) over the pair axis, O(n) memory (the
+    streams are generated and folded one at a time under a scan)."""
+    def one(carry, sj):
+        seed, sign = sj
+        return carry + _signed(mask_stream(seed, n), sign), None
+
+    out, _ = jax.lax.scan(one, jnp.zeros((n,), jnp.uint32),
+                          (jnp.asarray(seeds), jnp.asarray(signs)))
+    return out
+
+
+def masked_encode(x: jnp.ndarray, seeds: jnp.ndarray, signs: jnp.ndarray,
+                  frac_bits: int = FRAC_BITS) -> jnp.ndarray:
+    """encode(x) + summed pairwise mask, fused single pass over x."""
+    def one(carry, sj):
+        seed, sign = sj
+        return carry + _signed(mask_stream(seed, x.shape[0]), sign), None
+
+    out, _ = jax.lax.scan(one, encode(x, frac_bits),
+                          (jnp.asarray(seeds), jnp.asarray(signs)))
+    return out

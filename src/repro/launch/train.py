@@ -33,7 +33,9 @@ from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.core import (BaselineConfig, FLTrainer, ProtocolConfig,
                         SFLTrainer, SFPromptTrainer, SplitConfig, SplitModel)
+from repro.core.aggregation import get_aggregator
 from repro.core.comm import cost_inputs_from, sfprompt_comm, sfprompt_compute
+from repro.privacy.dp import calibrate_noise
 from repro.data import (DATASETS, synthetic_image_dataset,
                         synthetic_lm_dataset)
 from repro.fed import (ClientSampler, FederatedEngine, Population,
@@ -62,12 +64,24 @@ def build_data(args, cfg):
 
 def build_trainer(args, model):
     if args.method.startswith("sfprompt"):
+        dp_noise = 0.0
+        if args.dp_epsilon > 0:
+            # budget the target (eps, delta) evenly across the full run
+            dp_noise = calibrate_noise(args.dp_epsilon, args.dp_delta,
+                                       args.rounds)
+            print(f"DP: eps={args.dp_epsilon} delta={args.dp_delta} over "
+                  f"{args.rounds} round(s) -> noise multiplier "
+                  f"z={dp_noise:.3f} at clip C={args.dp_clip}", flush=True)
         pcfg = ProtocolConfig(
             clients_per_round=args.k, local_epochs=args.local_epochs,
             batch_size=args.batch_size, lr_local=args.lr, lr_split=args.lr,
             use_local_loss=(args.method == "sfprompt"),
-            return_client_trainable=args.personalize_tails)
-        return SFPromptTrainer(model, pcfg)
+            return_client_trainable=args.personalize_tails,
+            dp_clip=(args.dp_clip if args.dp_epsilon > 0 else 0.0),
+            dp_noise_multiplier=dp_noise, dp_delta=args.dp_delta)
+        aggregator = (get_aggregator(secure=True, seed=args.seed)
+                      if args.secure_agg else None)
+        return SFPromptTrainer(model, pcfg, aggregator)
     if args.method == "fl":
         return FLTrainer(model, BaselineConfig(
             local_epochs=args.local_epochs, batch_size=args.batch_size,
@@ -134,6 +148,18 @@ def main():
     ap.add_argument("--personalize-tails", action="store_true",
                     help="keep each sampled client's post-round tail in "
                          "the population (sfprompt methods only)")
+    ap.add_argument("--secure-agg", action="store_true",
+                    help="masked secure aggregation: the server sums "
+                         "blinded uint32 ring uploads it cannot invert "
+                         "(sfprompt methods only)")
+    ap.add_argument("--dp-epsilon", type=float, default=0.0,
+                    help="target total DP epsilon over --rounds (0 = DP "
+                         "off); calibrates the per-round Gaussian noise "
+                         "via the zCDP ledger")
+    ap.add_argument("--dp-delta", type=float, default=1e-5)
+    ap.add_argument("--dp-clip", type=float, default=1.0,
+                    help="per-client L2 clip on the round delta (DP-SGD "
+                         "sensitivity; used when --dp-epsilon > 0)")
     ap.add_argument("--local-epochs", type=int, default=10)
     ap.add_argument("--batch-size", type=int, default=16)
     ap.add_argument("--samples", type=int, default=2000)
@@ -161,6 +187,11 @@ def main():
         ap.error("straggler simulation (--dropout-rate/--straggle) needs an "
                  "sfprompt method — FL/SFL baselines train their cohort "
                  "synchronously")
+    if ((args.secure_agg or args.dp_epsilon > 0)
+            and not args.method.startswith("sfprompt")):
+        ap.error("--secure-agg/--dp-epsilon need an sfprompt method — the "
+                 "privacy engine plugs into the SFPrompt phase-3 "
+                 "aggregation path")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -240,6 +271,9 @@ def main():
     meter = getattr(trainer, "meter", None)
     if meter is not None:
         print(meter.report())
+    accountant = getattr(trainer, "accountant", None)
+    if accountant is not None:
+        print(accountant.report())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+"""Privacy engine: masked secure aggregation + DP-metered rounds.
+
+  fixed_point.py — uint32-ring fixed-point codec + tree<->ring plumbing
+  masking.py     — pairwise PRG seeds/signs, simulated key agreement,
+                   escrowed-seed dropout recovery (Bonawitz-style)
+  secure_agg.py  — ClearAggregator / SecureAggregator: the pluggable
+                   phase-3 aggregation the protocol jits over
+  dp.py          — DP-SGD clip + Gaussian noise on client deltas, zCDP
+                   PrivacyAccountant checkpointed through the engine
+
+Threat model and what is (not) protected: ARCHITECTURE.md §Privacy engine.
+"""
+from repro.privacy.dp import (PrivacyAccountant, calibrate_noise,  # noqa: F401
+                              clip_tree, gaussian_noise_tree)
+from repro.privacy.secure_agg import (SECURE, ClearAggregator,  # noqa: F401
+                                      SecureAggregator)

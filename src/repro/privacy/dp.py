@@ -1,0 +1,134 @@
+"""Differential privacy for client updates: DP-SGD clip + noise, zCDP ledger.
+
+The client-side mechanism (applied in core/local_update.py to the per-round
+(tail, prompt) delta, BEFORE masking/upload):
+
+    delta <- delta * min(1, C / ||delta||_2)          # global L2 clip
+    delta <- delta + N(0, (z * C)^2 I)                # calibrated Gaussian
+
+One release of that mechanism is rho = 1 / (2 z^2) zero-concentrated DP
+(zCDP); zCDP composes ADDITIVELY across rounds, and converts to the usual
+(eps, delta) ledger via
+
+    eps(delta) = rho + 2 * sqrt(rho * ln(1 / delta))      (Bun-Steinke'16)
+
+This is the per-client (local-model) guarantee against the honest-but-
+curious server; we deliberately do NOT claim subsampling amplification
+(the cohort sampler is not a secret), so the ledger is conservative.
+
+`PrivacyAccountant` is the cross-round ledger. Its state is two float64
+scalars checkpointed through FederatedEngine save/restore — npz round-trips
+them byte-identically, so a killed-and-resumed run reports the exact eps
+of the uninterrupted one. Mechanism hyperparameters are validated on
+restore like every other config fingerprint: a resume that silently changed
+z or C would invalidate the ledger.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DP_SEED = 97   # base PRNG domain for DP noise (disjoint from WIRE/MASK)
+
+
+# ------------------------------------------------------------- mechanism
+def clip_tree(tree, l2_clip: float):
+    """Scale `tree` to global L2 norm <= l2_clip (no-op when under)."""
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    norm = jnp.sqrt(jnp.maximum(sq, 1e-24))
+    factor = jnp.minimum(1.0, l2_clip / norm)
+    return jax.tree.map(lambda x: (x * factor).astype(x.dtype), tree), norm
+
+
+def gaussian_noise_tree(key, tree, stddev: float):
+    """iid N(0, stddev^2) shaped like `tree` (per-leaf folded keys)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noised = [stddev * jax.random.normal(k, x.shape, jnp.float32)
+              for k, x in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, noised)
+
+
+# ------------------------------------------------------------- accounting
+def rho_per_release(noise_multiplier: float) -> float:
+    """zCDP cost of one Gaussian release at noise z * sensitivity."""
+    if noise_multiplier <= 0:
+        return math.inf
+    return 1.0 / (2.0 * noise_multiplier ** 2)
+
+
+def epsilon_from_rho(rho: float, delta: float) -> float:
+    """Bun-Steinke zCDP -> (eps, delta) conversion."""
+    if rho == 0:
+        return 0.0
+    return rho + 2.0 * math.sqrt(rho * math.log(1.0 / delta))
+
+
+def calibrate_noise(epsilon: float, delta: float, rounds: int) -> float:
+    """Noise multiplier z so `rounds` composed releases land at a total
+    (epsilon, delta). Inverts eps = rho + 2 sqrt(rho L): sqrt(rho_total)
+    = sqrt(L + eps) - sqrt(L), split evenly across rounds."""
+    if epsilon <= 0:
+        raise ValueError(f"target epsilon must be > 0, got {epsilon}")
+    L = math.log(1.0 / delta)
+    rho_total = (math.sqrt(L + epsilon) - math.sqrt(L)) ** 2
+    rho_round = rho_total / max(1, rounds)
+    return math.sqrt(1.0 / (2.0 * rho_round))
+
+
+class PrivacyAccountant:
+    """Additive zCDP ledger across rounds, checkpoint-exact."""
+
+    def __init__(self, *, noise_multiplier: float, l2_clip: float,
+                 delta: float = 1e-5):
+        if noise_multiplier <= 0:
+            raise ValueError("DP accounting needs noise_multiplier > 0 "
+                             f"(got {noise_multiplier}); without noise no "
+                             "finite epsilon exists")
+        if l2_clip <= 0:
+            raise ValueError(f"l2_clip must be > 0, got {l2_clip}")
+        self.noise_multiplier = float(noise_multiplier)
+        self.l2_clip = float(l2_clip)
+        self.delta = float(delta)
+        self.rho = 0.0
+        self.releases = 0
+
+    def spend(self, n_releases: int = 1) -> None:
+        self.rho += n_releases * rho_per_release(self.noise_multiplier)
+        self.releases += n_releases
+
+    def epsilon(self, delta: float = None) -> float:
+        return epsilon_from_rho(self.rho,
+                                self.delta if delta is None else delta)
+
+    def report(self) -> str:
+        return (f"zCDP rho={self.rho:.6f} over {self.releases} release(s) "
+                f"-> eps={self.epsilon():.3f} at delta={self.delta:g} "
+                f"(z={self.noise_multiplier:g}, C={self.l2_clip:g})")
+
+    # ------------------------------------------------------------ resume
+    def state_dict(self) -> Dict[str, np.float64]:
+        """Ledger state + mechanism params. rho/releases restore the
+        ledger; the params are fingerprints validated on load."""
+        return {"rho": np.float64(self.rho),
+                "releases": np.float64(self.releases),
+                "noise_multiplier": np.float64(self.noise_multiplier),
+                "l2_clip": np.float64(self.l2_clip),
+                "delta": np.float64(self.delta)}
+
+    def load_state_dict(self, state: Mapping[str, np.ndarray]) -> None:
+        for name in ("noise_multiplier", "l2_clip", "delta"):
+            saved = float(np.asarray(state[name]))
+            if saved != getattr(self, name):
+                raise ValueError(
+                    f"DP mechanism mismatch on resume: checkpoint "
+                    f"{name}={saved} vs engine {getattr(self, name)} — the "
+                    f"epsilon ledger would be invalid; rebuild with the "
+                    f"original DP flags")
+        self.rho = float(np.asarray(state["rho"]))
+        self.releases = int(np.asarray(state["releases"]))

@@ -1,0 +1,82 @@
+"""Fixed-point uint32 ring codec for secure aggregation.
+
+Secure aggregation sums ciphertexts, so the plaintext arithmetic must be
+EXACT and closed under addition — floats are neither. Client deltas are
+therefore carried as two's-complement fixed point in the uint32 ring
+(`frac_bits` fractional bits, saturating encode), where pairwise masks add
+and cancel mod 2^32 with no rounding anywhere.
+
+Range discipline: the server decodes only SUMS of client values, so every
+client pre-scales its contribution by w_k / W_ref (W_ref = the cohort's
+total weight, public metadata) — the ring then only ever holds values
+bounded by max|x|, and the headroom to the 2^31 edge is 2^(31 - frac_bits)
+in float units (~32768 at the default 16 bits). Crossing it saturates per
+client and WRAPS on the summed ring — the property tests pin both edges.
+
+Tree <-> ring plumbing (`flatten_tree` / `unflatten_tree`) fixes the leaf
+order via jax.tree, pads to the kernel lane multiple (the pad is masked
+and counted on the wire like real payload), and is shared by the
+aggregator, the meter cross-check, and the analytical cost model so the
+three can never disagree about payload sizes.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.secure_mask.ops import (FRAC_BITS, decode,  # noqa: F401
+                                           encode, ring_size)
+from repro.kernels.secure_mask.ref import SAT
+
+RING_BYTES = 4   # one uint32 per encoded element on the wire
+
+
+def resolution(frac_bits: int = FRAC_BITS) -> float:
+    """Smallest representable increment, in float units."""
+    return 2.0 ** -frac_bits
+
+
+def headroom(frac_bits: int = FRAC_BITS) -> float:
+    """Largest encodable magnitude before saturation, in float units
+    (the ring's SAT bound — see kernels/secure_mask/ref.py)."""
+    return SAT * resolution(frac_bits)
+
+
+def roundtrip_tol(n_clients: int, frac_bits: int = FRAC_BITS) -> float:
+    """Worst-case absolute error of a decoded n-client fixed-point sum vs
+    the float computation: half an ulp of encode rounding per client plus
+    one f32 conversion ulp each."""
+    return (n_clients + 1) * (0.5 + 2.0 ** -7) * resolution(frac_bits)
+
+
+def flatten_tree(tree: Any) -> Tuple[jnp.ndarray, List, List, int]:
+    """K-leading-axis pytree -> (K, n_padded) f32 matrix + recovery info.
+    Returns (flat, treedef, shapes, n_real)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    k = leaves[0].shape[0]
+    shapes = [leaf.shape[1:] for leaf in leaves]
+    flat = jnp.concatenate(
+        [leaf.reshape(k, -1).astype(jnp.float32) for leaf in leaves], axis=1)
+    n_real = flat.shape[1]
+    pad = ring_size(n_real) - n_real
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat, treedef, shapes, n_real
+
+
+def unflatten_tree(flat: jnp.ndarray, treedef, shapes, n_real: int,
+                   like: Any) -> Any:
+    """(n_padded,) vector -> pytree shaped/dtyped like `like` (no K axis)."""
+    flat = flat[:n_real]
+    leaves, pos = [], 0
+    like_leaves = jax.tree.leaves(like)
+    for shape, ref_leaf in zip(shapes, like_leaves):
+        size = 1
+        for s in shape:
+            size *= s
+        leaves.append(flat[pos: pos + size].reshape(shape)
+                      .astype(ref_leaf.dtype))
+        pos += size
+    return jax.tree.unflatten(treedef, leaves)

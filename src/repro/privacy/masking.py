@@ -1,0 +1,70 @@
+"""Pairwise PRG masking (Bonawitz et al., CCS'17 — simplified).
+
+Client k's upload is blinded with one PRG stream per cohort peer:
+
+    upload_k = encode(x_k) + sum_{j != k} sign(k, j) * PRG(s_kj)
+
+with sign(k, j) = +1 for j > k and -1 for j < k and s_kj = s_jk, so in the
+cohort SUM every pair contributes +PRG(s_kj) - PRG(s_kj) = 0: the server
+sees uniform-looking ring noise per client yet decodes the exact sum.
+
+Key agreement is SIMULATED: pair seeds derive from a per-round key
+(round-keyed fold_in, symmetrized), standing in for the DH exchange whose
+pubkey traffic the wire model meters (PK_BYTES per client per peer). Seeds
+are ESCROWED in the Bonawitz sense: when the RoundScheduler drops client j
+mid-round, each survivor i reveals s_ij (SEED_BYTES each on the wire) and
+the server regenerates sum_i sign(i, j) * PRG(s_ij) — the residue the
+dead client's missing upload left in the sum — and subtracts it. Recovery
+MUST run the same impl (same PRG family) as the uploads; ops.summed_mask
+pins that contract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MASK_SEED = 41   # base PRNG domain for per-round pairwise seeds
+PK_BYTES = 32    # simulated DH public key size (key-agreement traffic)
+SEED_BYTES = 4   # one uint32 pair seed (escrow-reveal traffic)
+
+
+def pair_seeds(round_key, k: int) -> jnp.ndarray:
+    """(K, K) uint32 symmetric pair-seed matrix, zero diagonal, derived
+    from the round key — the simulation's stand-in for key agreement."""
+    raw = jax.random.bits(round_key, (k, k), jnp.uint32)
+    i = jnp.arange(k)[:, None]
+    j = jnp.arange(k)[None, :]
+    sym = jnp.where(i < j, raw, raw.T)
+    return jnp.where(i == j, jnp.uint32(0), sym)
+
+
+def round_key(seed: int, round_idx) -> jax.Array:
+    """Per-round masking key; `round_idx` may be traced (it rides in the
+    trainer state)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed ^ MASK_SEED),
+                              round_idx)
+
+
+def pair_signs(k: int) -> np.ndarray:
+    """(K, K) int32 antisymmetric sign matrix: +1 above the diagonal."""
+    i = np.arange(k)[:, None]
+    j = np.arange(k)[None, :]
+    return np.sign(j - i).astype(np.int32)
+
+
+def client_pairs(k: int, client: int):
+    """Static (peers, signs) for one client's K-1 mask streams."""
+    peers = np.array([j for j in range(k) if j != client], dtype=np.int64)
+    signs = pair_signs(k)[client, peers]
+    return peers, signs
+
+
+def recovery_pairs(k: int):
+    """All (i, j) ordered pairs as index arrays for the server's dropout
+    correction: residue = sum_{i,j} alive_i * (1-alive_j) * sign(i,j)
+    * PRG(s_ij). Static in K; the alive vector gates it at runtime."""
+    i = np.repeat(np.arange(k), k)
+    j = np.tile(np.arange(k), k)
+    keep = i != j
+    return i[keep], j[keep]

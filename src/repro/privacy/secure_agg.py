@@ -1,0 +1,141 @@
+"""Pluggable phase-3 aggregators: clear FedAvg vs masked secure aggregation.
+
+Both implement one contract the protocol jits over:
+
+    aggregate(client_trees, weights, fallback, round_idx)
+        -> (aggregated tree, wire bytes dict)
+
+`ClearAggregator` is bit-identical to the seed repo's `fedavg_partial` path
+(the default — existing runs, checkpoints, and golden tests are unchanged).
+
+`SecureAggregator` makes the same round cryptographically blind:
+
+  1. each client pre-scales its contribution by w_k / W (the public weight
+     metadata — W cancels between encode and decode, so the simulation
+     folds the survivor-renormalization of `fedavg_partial` straight in),
+  2. fixed-point encodes into the uint32 ring and adds its pairwise PRG
+     masks in one fused pass (kernels/secure_mask — Pallas on TPU, XLA ref
+     on CPU CI),
+  3. the server ring-sums the surviving uploads — pair masks between two
+     survivors cancel mod 2^32,
+  4. masks dangling toward clients the RoundScheduler dropped are
+     regenerated from the escrowed pair seeds and subtracted (Bonawitz
+     dropout recovery), composing with `fedavg_partial`'s survivor
+     renormalization: the decoded sum IS the survivor-weighted mean,
+  5. an all-dropped round falls back to the pre-round globals, exactly
+     like the clear path.
+
+Every byte of the exchange crosses a runtime Boundary (RawCodec), so the
+TrafficMeter and `comm.secure_agg_breakdown` meter the same payloads:
+simulated DH pubkeys (PK_BYTES per client per peer), the uint32 uploads
+(RING_BYTES per padded element, survivors only), and the per-dropout seed
+reveals (SEED_BYTES per survivor x dropped pair).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import fedavg_partial
+from repro.kernels.secure_mask.ops import (FRAC_BITS, decode, masked_encode,
+                                           summed_mask)
+from repro.privacy.fixed_point import flatten_tree, unflatten_tree
+from repro.privacy.masking import (PK_BYTES, SEED_BYTES, client_pairs,
+                                   pair_seeds, recovery_pairs, round_key)
+from repro.runtime.boundary import Boundary
+from repro.runtime.codec import get_codec
+from repro.runtime.meter import SECURE
+
+
+class ClearAggregator:
+    """`fedavg_partial` behind the pluggable-aggregator contract. The
+    empty wire dict tells the protocol to keep its seed-exact
+    (K + n_up) * param_bytes accounting."""
+
+    name = "clear"
+
+    def describe(self) -> str:
+        return "clear"
+
+    def aggregate(self, client_trees, weights: jnp.ndarray, fallback,
+                  round_idx) -> Tuple[Any, Dict[str, jnp.ndarray]]:
+        return fedavg_partial(client_trees, weights, fallback), {}
+
+
+class SecureAggregator:
+    """Masked secure aggregation over the fixed-point uint32 ring."""
+
+    name = "secure"
+
+    def __init__(self, *, frac_bits: int = FRAC_BITS, impl: str = "auto",
+                 seed: int = 0):
+        self.frac_bits = frac_bits
+        self.impl = impl
+        self.seed = seed
+        raw = get_codec("raw")
+        self.params_boundary = Boundary("params", raw)
+        self.secure_boundary = Boundary(SECURE, raw)
+
+    def describe(self) -> str:
+        return f"secure(frac_bits={self.frac_bits}, seed={self.seed})"
+
+    def aggregate(self, client_trees, weights: jnp.ndarray, fallback,
+                  round_idx) -> Tuple[Any, Dict[str, jnp.ndarray]]:
+        flat, treedef, shapes, n_real = flatten_tree(client_trees)
+        k, n_pad = flat.shape
+        w = weights.astype(jnp.float32)
+        total = w.sum()
+        alive = (w > 0)
+        n_up = alive.sum().astype(jnp.float32)
+        # survivor-renormalized weights; W cancels encode->decode so using
+        # the survivor total directly reproduces fedavg_partial's mean
+        wn = w / jnp.maximum(total, 1e-9)
+        scaled = flat * wn[:, None]
+
+        rk = round_key(self.seed, round_idx)
+        seeds = pair_seeds(rk, k)
+
+        # ---- client side: fused encode + pairwise mask, survivors upload
+        ring_sum = jnp.zeros((n_pad,), jnp.uint32)
+        for c in range(k):
+            peers, signs = client_pairs(k, c)
+            enc = masked_encode(scaled[c], seeds[c, peers],
+                                jnp.asarray(signs), frac_bits=self.frac_bits,
+                                impl=self.impl)
+            ring_sum = ring_sum + jnp.where(alive[c], enc, jnp.uint32(0))
+
+        # ---- server side: regenerate masks dangling toward dropped
+        # clients from the escrowed seeds and subtract the residue. Gated
+        # on an actual dropout — the common full-participation round must
+        # not pay a second K*(K-1) pass of PRG generation over zeros.
+        ri, rj = recovery_pairs(k)
+        eff_signs = (jnp.sign(jnp.asarray(rj - ri)).astype(jnp.int32)
+                     * alive[ri].astype(jnp.int32)
+                     * (1 - alive[rj].astype(jnp.int32)))
+        residue = jax.lax.cond(
+            jnp.any(~alive),
+            lambda: summed_mask(seeds[ri, rj], eff_signs, n_pad,
+                                frac_bits=self.frac_bits, impl=self.impl),
+            lambda: jnp.zeros((n_pad,), jnp.uint32))
+        corrected = ring_sum - residue
+
+        mean_flat = decode(corrected, self.frac_bits)
+        agg = unflatten_tree(mean_flat, treedef, shapes, n_real, fallback)
+        agg = jax.tree.map(
+            lambda x, fb: jnp.where(total > 0, x, fb), agg, fallback)
+
+        # ---- wire: pubkey exchange (all K set up before dropouts), masked
+        # uploads (survivors only), escrow reveals (survivor x dropped)
+        pubkeys = jax.random.bits(rk, (k * k, PK_BYTES // 4), jnp.uint32)
+        _, b_pk = self.secure_boundary.transmit(pubkeys, train=False)
+        _, b_up = self.params_boundary.transmit(
+            jnp.broadcast_to(corrected[None], (k, n_pad)), train=False,
+            rows=n_up)
+        n_dropped = k - n_up
+        reveal_payload = seeds[ri, rj].reshape(-1, 1)
+        assert SEED_BYTES == 4  # one uint32 per revealed pair seed
+        _, b_reveal = self.secure_boundary.transmit(
+            reveal_payload, train=False, rows=n_up * n_dropped)
+        return agg, {"params_up": b_up, SECURE: b_pk + b_reveal}

@@ -162,7 +162,26 @@ class Int8Codec(WireCodec):
         return type(self) is type(other) and self.impl == other.impl
 
 
-CODECS = {"fp32": Fp32Codec, "bf16": Bf16Codec, "int8": Int8Codec}
+class RawCodec(WireCodec):
+    """Verbatim 4-byte words on the wire — no cast, no quantization. The
+    secure-aggregation path uses it for uint32 ring uploads and seed/pubkey
+    exchange, where a float cast would corrupt the payload (f32 holds only
+    24 bits of a uint32) and the bytes must be counted exactly."""
+
+    name = "raw"
+
+    def encode(self, x, u):
+        return x
+
+    def decode(self, payload, dtype):
+        return payload.astype(dtype)
+
+    def payload_nbytes(self, shape):
+        return 4 * math.prod(shape)
+
+
+CODECS = {"fp32": Fp32Codec, "bf16": Bf16Codec, "int8": Int8Codec,
+          "raw": RawCodec}
 
 
 def get_codec(name: str, **kw) -> WireCodec:

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import latest_checkpoint, load_checkpoint, save_checkpoint
+from repro.checkpoint import (latest_checkpoint, load_checkpoint,
+                              load_latest, save_checkpoint)
 from repro.data import (DATASETS, dirichlet_partition, iid_partition,
                         select_clients, stack_clients,
                         synthetic_image_dataset, synthetic_lm_dataset)
@@ -68,6 +69,48 @@ def test_latest_checkpoint(tmp_path):
     for step in (3, 11, 7):
         save_checkpoint(str(tmp_path), {"x": jnp.ones(2)}, step=step)
     assert latest_checkpoint(str(tmp_path)).endswith("ckpt_00000011.npz")
+
+
+def test_keep_last_one_prunes_all_but_newest(tmp_path):
+    """keep_last=1 — the tightest retention the engine offers — must leave
+    exactly the newest step on disk after every save."""
+    import os
+    for step in (1, 2, 5):
+        save_checkpoint(str(tmp_path), {"x": jnp.full(2, float(step))},
+                        step=step, keep_last=1)
+        files = sorted(f for f in os.listdir(tmp_path)
+                       if f.endswith(".npz"))
+        assert files == [f"ckpt_{step:08d}.npz"]
+    back = load_latest(str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(back["x"]), np.full(2, 5.0))
+
+
+def test_keep_last_zero_rejected(tmp_path):
+    import pytest
+    with pytest.raises(ValueError, match="keep_last"):
+        save_checkpoint(str(tmp_path), {"x": jnp.ones(2)}, step=1,
+                        keep_last=0)
+
+
+def test_load_latest_empty_and_missing_dir(tmp_path):
+    """No checkpoints -> None (engine.restore reports 'nothing to resume'
+    instead of crashing), for both an empty and a nonexistent directory."""
+    assert load_latest(str(tmp_path)) is None
+    assert load_latest(str(tmp_path / "never_created")) is None
+
+
+def test_load_latest_skips_corrupt_tail(tmp_path):
+    """A torn/damaged newest file must not kill the resume: load_latest
+    falls back to the newest INTACT checkpoint — load-bearing now that the
+    DP accountant's epsilon ledger rides the run checkpoint."""
+    save_checkpoint(str(tmp_path), {"x": jnp.full(2, 1.0)}, step=1)
+    with open(tmp_path / "ckpt_00000002.npz", "wb") as f:
+        f.write(b"PK\x03\x04 torn mid-write")      # zip magic, no payload
+    back = load_latest(str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(back["x"]), np.full(2, 1.0))
+    # a directory holding ONLY corrupt files degrades to None, not a crash
+    (tmp_path / "ckpt_00000001.npz").unlink()
+    assert load_latest(str(tmp_path)) is None
 
 
 # ------------------------------------------------------------------ sharding

@@ -1,0 +1,341 @@
+"""Privacy engine: masked secure aggregation == clear FedAvg (incl. under
+scheduler dropouts), blinded uploads, wire-byte cross-checks, DP-SGD
+clipping, and the zCDP ledger's byte-identical kill-and-restart resume."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ProtocolConfig, SFPromptTrainer, SplitConfig, SplitModel
+from repro.core.aggregation import fedavg, fedavg_partial, get_aggregator
+from repro.core.comm import secure_agg_breakdown
+from repro.core.local_update import dp_clip_and_noise
+from repro.data import DATASETS, synthetic_image_dataset
+from repro.fed import (ClientSampler, FederatedEngine, Population,
+                       RoundScheduler, StragglerConfig)
+from repro.kernels.secure_mask.ops import (encode, masked_encode, ring_size,
+                                           summed_mask)
+from repro.privacy import PrivacyAccountant, SecureAggregator, calibrate_noise
+from repro.privacy.fixed_point import roundtrip_tol
+from repro.runtime import WireSpec
+
+KEY = jax.random.PRNGKey(0)
+N_CLIENTS = 40
+N_LOCAL = 8
+BATCH = 4
+K = 4
+
+
+def random_cohort_tree(key, k):
+    return {"tail": {"w": jax.random.normal(key, (k, 7, 3)),
+                     "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                            (k, 5))},
+            "prompt": jax.random.normal(jax.random.fold_in(key, 2),
+                                        (k, 4, 8))}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("vit-base").reduced(n_layers=3, d_model=32, d_ff=64)
+    split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=2,
+                        prune_gamma=0.3, local_epochs=1)
+    data = synthetic_image_dataset(DATASETS["cifar10-syn"],
+                                   N_CLIENTS * N_LOCAL, seed=0, image_hw=32)
+    pop = Population.from_partition(data, N_CLIENTS, scheme="dirichlet",
+                                    alpha=0.1, seed=0)
+    return cfg, split, data, pop
+
+
+def make_trainer(cfg, split, *, aggregator=None, dp_noise=0.0, dp_clip=0.0):
+    model = SplitModel(cfg, split, WireSpec.make("fp32"))
+    pcfg = ProtocolConfig(clients_per_round=K, local_epochs=1,
+                          batch_size=BATCH, momentum=0.0,
+                          dp_clip=dp_clip, dp_noise_multiplier=dp_noise)
+    return SFPromptTrainer(model, pcfg, aggregator)
+
+
+# ------------------------------------------------------- aggregator level
+@pytest.mark.parametrize("weights", [
+    [3.0, 2.0, 7.0, 1.0, 5.0],            # full participation
+    [3.0, 2.0, 0.0, 1.0, 5.0],            # one dropout
+    [0.0, 2.0, 0.0, 0.0, 5.0],            # most dropped
+])
+def test_secure_aggregate_equals_clear(weights):
+    """The masked ring sum decodes to exactly fedavg_partial's survivor-
+    weighted mean, within fixed-point tolerance — dropped clients' dangling
+    masks are reconstructed from escrowed seeds and subtracted."""
+    k = len(weights)
+    tree = random_cohort_tree(KEY, k)
+    w = jnp.asarray(weights)
+    fb = jax.tree.map(lambda x: jnp.full_like(x[0], -1.0), tree)
+    clear = fedavg_partial(tree, w, fb)
+    sec, wire = SecureAggregator(impl="ref").aggregate(tree, w, fb,
+                                                       jnp.int32(2))
+    tol = roundtrip_tol(k)
+    for a, b in zip(jax.tree.leaves(clear), jax.tree.leaves(sec)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=tol)
+    assert float(wire["params_up"]) > 0 and float(wire["secure"]) > 0
+
+
+def test_secure_aggregate_all_dropped_falls_back():
+    tree = random_cohort_tree(KEY, 4)
+    fb = jax.tree.map(lambda x: jnp.full_like(x[0], 3.5), tree)
+    sec, _ = SecureAggregator(impl="ref").aggregate(
+        tree, jnp.zeros((4,)), fb, jnp.int32(0))
+    for a, b in zip(jax.tree.leaves(sec), jax.tree.leaves(fb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_masked_upload_is_blinded():
+    """One client's on-wire payload must look nothing like its plaintext
+    encoding: virtually every ring element differs and the high bit is
+    ~uniform (the pairwise PRG stream dominates the payload)."""
+    n = ring_size(1000)
+    x = jax.random.normal(KEY, (n,)) * 0.1
+    seeds = jax.random.bits(KEY, (4,), jnp.uint32)
+    signs = jnp.array([1, 1, -1, -1], jnp.int32)
+    upload = masked_encode(x, seeds, signs, impl="ref")
+    plain = encode(x)
+    assert float(jnp.mean(upload == plain)) < 0.01
+    high_bit = np.asarray(upload >> 31, np.float64)
+    assert 0.4 < high_bit.mean() < 0.6
+
+
+def test_upload_minus_regenerated_mask_is_plaintext():
+    """summed_mask regenerates exactly the stream masked_encode folded in
+    (same impl) — the dropout-recovery contract."""
+    n = ring_size(300)
+    x = jax.random.normal(KEY, (n,))
+    seeds = jax.random.bits(KEY, (3,), jnp.uint32)
+    signs = jnp.array([1, -1, 1], jnp.int32)
+    upload = masked_encode(x, seeds, signs, impl="ref")
+    mask = summed_mask(seeds, signs, n, impl="ref")
+    np.testing.assert_array_equal(np.asarray(upload - mask),
+                                  np.asarray(encode(x)))
+
+
+@pytest.mark.skipif(jax.default_backend() != "tpu",
+                    reason="pltpu PRNG has no CPU/interpret lowering; the "
+                           "Pallas mask kernel validates on TPU")
+def test_pallas_aggregate_matches_ref():
+    """Mask bits differ across impls by design, but the cohort ring sum
+    (masks cancelled / recovered) is impl-independent."""
+    tree = random_cohort_tree(KEY, 4)
+    w = jnp.array([2.0, 1.0, 0.0, 3.0])
+    fb = jax.tree.map(lambda x: jnp.zeros_like(x[0]), tree)
+    ref, _ = SecureAggregator(impl="ref").aggregate(tree, w, fb, 1)
+    pal, _ = SecureAggregator(impl="pallas").aggregate(tree, w, fb, 1)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(pal)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=roundtrip_tol(4))
+
+
+# ---------------------------------------------------------- protocol level
+def cohort_data(pop, ids):
+    return {k: jnp.asarray(v) for k, v in pop.gather(ids).items()}
+
+
+def test_secure_round_equals_clear_round(setup):
+    """One full protocol round (local epochs, pruning, split training,
+    aggregation) with the secure aggregator lands on the clear round's
+    params within fixed-point tolerance — including under a straggler
+    plan that drops a client mid-round."""
+    cfg, split, _, pop = setup
+    data = cohort_data(pop, np.arange(K))
+    part = {"transmit": jnp.array([1.0, 0.4, 1.0, 1.0]),
+            "aggregate": jnp.array([1.0, 0.0, 1.0, 1.0])}
+
+    tr_clear = make_trainer(cfg, split)
+    st_c, m_c = tr_clear.round(tr_clear.init(KEY), data, dict(part))
+    tr_sec = make_trainer(
+        cfg, split, aggregator=get_aggregator(secure=True, impl="ref"))
+    st_s, m_s = tr_sec.round(tr_sec.init(KEY), data, dict(part))
+
+    tol = roundtrip_tol(K)
+    for a, b in zip(jax.tree.leaves(st_c["params"]),
+                    jax.tree.leaves(st_s["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=tol)
+    # phase-2 smashed traffic is identical; only phase 3 changed
+    assert m_c["wire/head_body_bytes"] == m_s["wire/head_body_bytes"]
+    assert m_s["wire/secure_bytes"] > 0
+
+
+def test_secure_wire_bytes_match_analytical(setup):
+    """Metered secure-round bytes == comm.secure_agg_breakdown within 5%
+    (exact in practice: both count the same padded payload shapes)."""
+    cfg, split, _, pop = setup
+    data = cohort_data(pop, np.arange(K))
+    part = {"transmit": jnp.ones((K,)),
+            "aggregate": jnp.array([1.0, 1.0, 0.0, 1.0])}
+    tr = make_trainer(
+        cfg, split, aggregator=get_aggregator(secure=True, impl="ref"))
+    st = tr.init(KEY)
+    st, m = tr.round(st, data, dict(part))
+
+    trainable = {"tail": st["params"]["tail"],
+                 "prompt": st["params"]["prompt"]}
+    n_tr = sum(int(np.prod(x.shape))
+               for x in jax.tree.leaves(trainable))
+    pb = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(trainable))
+    bd = secure_agg_breakdown(n_trainable=n_tr, param_nbytes=pb, K=K,
+                              n_uploads=3)
+    for name in ("params", "secure"):
+        got = tr.meter.totals[name]
+        assert abs(got - bd[name]) <= 0.05 * bd[name], (name, got, bd[name])
+
+
+def test_secure_all_dropped_round_falls_back(setup):
+    cfg, split, _, pop = setup
+    data = cohort_data(pop, np.arange(K))
+    part = {"transmit": jnp.zeros((K,)), "aggregate": jnp.zeros((K,))}
+    tr = make_trainer(
+        cfg, split, aggregator=get_aggregator(secure=True, impl="ref"))
+    st0 = tr.init(KEY)
+    before = jax.tree.map(np.asarray, st0["params"])
+    st1, _ = tr.round(st0, data, part)
+    for name in ("tail", "prompt"):
+        for a, b in zip(jax.tree.leaves(before[name]),
+                        jax.tree.leaves(st1["params"][name])):
+            np.testing.assert_array_equal(a, np.asarray(b))
+
+
+# ------------------------------------------------------------------ DP
+def test_dp_clip_bounds_delta():
+    """Clipping caps the update's L2 against the reference; zero noise
+    multiplier adds nothing."""
+    ref = {"a": jnp.zeros((6,)), "b": jnp.zeros((2, 3))}
+    big = {"a": jnp.full((6,), 10.0), "b": jnp.full((2, 3), -10.0)}
+    out, norm = dp_clip_and_noise(big, ref, KEY, l2_clip=1.0,
+                                  noise_multiplier=0.0)
+    delta_sq = sum(float(jnp.sum(jnp.square(x)))
+                   for x in jax.tree.leaves(out))
+    assert delta_sq <= 1.0 + 1e-5
+    assert float(norm) > 1.0
+    # under the clip: identity
+    small = {"a": jnp.full((6,), 0.01), "b": jnp.full((2, 3), 0.01)}
+    out2, _ = dp_clip_and_noise(small, ref, KEY, l2_clip=1.0,
+                                noise_multiplier=0.0)
+    for a, b in zip(jax.tree.leaves(out2), jax.tree.leaves(small)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+
+def test_dp_noise_requires_clip():
+    cfg = get_config("vit-base").reduced(n_layers=3, d_model=32, d_ff=64)
+    split = SplitConfig(prompt_len=2, local_epochs=1)
+    with pytest.raises(ValueError, match="dp_clip"):
+        make_trainer(cfg, split, dp_noise=1.0, dp_clip=0.0)
+
+
+def test_accountant_composition_and_calibration():
+    """rho composes additively; epsilon is monotone in rounds; the
+    calibrated noise lands a full run exactly on the target epsilon."""
+    z = calibrate_noise(8.0, 1e-5, rounds=10)
+    acct = PrivacyAccountant(noise_multiplier=z, l2_clip=1.0, delta=1e-5)
+    eps_seen = []
+    for _ in range(10):
+        acct.spend()
+        eps_seen.append(acct.epsilon())
+    assert all(a < b for a, b in zip(eps_seen, eps_seen[1:]))
+    assert abs(eps_seen[-1] - 8.0) < 1e-9
+    assert acct.releases == 10
+    # tighter target -> more noise
+    assert calibrate_noise(1.0, 1e-5, 10) > z
+
+
+def test_fedavg_zero_weights_regression():
+    """Satellite: all-zero weights must not silently divide by epsilon —
+    raise without a fallback, return the fallback with one."""
+    tree = random_cohort_tree(KEY, 3)
+    with pytest.raises(ValueError, match="sum to 0"):
+        fedavg(tree, jnp.zeros((3,)))
+    fb = jax.tree.map(lambda x: jnp.full_like(x[0], 2.0), tree)
+    out = fedavg(tree, jnp.zeros((3,)), fb)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(fb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # nonzero weights: unchanged semantics
+    w = jnp.array([1.0, 2.0, 3.0])
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.leaves(fedavg(tree, w))[0]),
+        np.asarray(jax.tree.leaves(fedavg(tree, w, fb))[0]),
+        rtol=1e-6, atol=1e-7)
+
+
+# ------------------------------------------------------------- engine level
+def build_engine(cfg, split, pop, *, secure=False, dp=False, seed=7):
+    agg = get_aggregator(secure=True, impl="ref") if secure else None
+    tr = make_trainer(cfg, split, aggregator=agg,
+                      dp_noise=(0.8 if dp else 0.0),
+                      dp_clip=(1.0 if dp else 0.0))
+    sampler = ClientSampler(pop.n_clients, K, seed=seed)
+    sched = RoundScheduler(
+        StragglerConfig(dropout_rate=0.25, late_mode="drop"), seed=seed)
+    return FederatedEngine(tr, pop, sampler, sched)
+
+
+def test_dp_secure_engine_resume_byte_identical(setup, tmp_path):
+    """Kill-and-restart with DP + secure aggregation: params AND the zCDP
+    ledger of the resumed run are byte-identical to the uninterrupted one."""
+    cfg, split, data, _ = setup
+
+    def build():
+        pop = Population.from_partition(data, N_CLIENTS, scheme="dirichlet",
+                                        alpha=0.1, seed=0)
+        return build_engine(cfg, split, pop, secure=True, dp=True)
+
+    ref = build()
+    ref.init(KEY)
+    for _ in range(3):
+        ref.run_round()
+
+    eng = build()
+    eng.init(KEY)
+    for _ in range(2):
+        eng.run_round()
+    ckpt = str(tmp_path / "ckpt")
+    eng.save(ckpt)
+
+    res = build()
+    assert res.restore(ckpt)
+    assert res.round_idx == 2
+    # ledger restored exactly at the kill point (2 releases), then composes
+    assert res.trainer.accountant.releases == 2
+    assert res.trainer.accountant.rho == eng.trainer.accountant.rho
+    res.run_round()
+
+    for a, b in zip(jax.tree.leaves(ref.state["params"]),
+                    jax.tree.leaves(res.state["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ref.trainer.accountant.rho == res.trainer.accountant.rho
+    assert ref.trainer.accountant.epsilon() == res.trainer.accountant.epsilon()
+    assert ref.trainer.meter.as_dict() == res.trainer.meter.as_dict()
+
+
+def test_resume_clear_checkpoint_under_secure_fails(setup, tmp_path):
+    """The aggregator rides the trainer fingerprint: a clear-agg checkpoint
+    must not silently resume under secure aggregation."""
+    cfg, split, _, pop = setup
+    eng = build_engine(cfg, split, pop, secure=False)
+    eng.state = eng.trainer.init(KEY)
+    ckpt = str(tmp_path / "ckpt")
+    eng.save(ckpt)
+    eng2 = build_engine(cfg, split, pop, secure=True)
+    with pytest.raises(ValueError, match="hyperparameters"):
+        eng2.restore(ckpt)
+
+
+def test_resume_changed_dp_flags_fails(setup, tmp_path):
+    """A resumed run with a different noise multiplier would invalidate
+    the epsilon ledger — must fail loudly."""
+    cfg, split, _, pop = setup
+    eng = build_engine(cfg, split, pop, dp=True)
+    eng.state = eng.trainer.init(KEY)
+    eng.trainer.accountant.spend(2)
+    ckpt = str(tmp_path / "ckpt")
+    eng.save(ckpt)
+
+    other = build_engine(cfg, split, pop, dp=True)
+    other.trainer.accountant.noise_multiplier = 0.3   # simulate new flags
+    with pytest.raises(ValueError):
+        other.restore(ckpt)

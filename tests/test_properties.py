@@ -201,6 +201,72 @@ def test_sgd_descends_quadratic(lr, seed):
         x = x_new
 
 
+# ----------------------------------------------------------- fixed point
+@given(n=st.integers(1, 64), log_scale=st.floats(-4.0, 4.0),
+       seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_fixed_point_roundtrip_across_magnitudes(n, log_scale, seed):
+    """encode/decode round-trips within half a fixed-point step plus the
+    f32 representation error of the scaled value, from 1e-4 to 1e4
+    (clamped inside the saturation edge — saturation itself is pinned by
+    test_ring_boundary_overflow_wraps)."""
+    from repro.privacy.fixed_point import headroom, resolution
+    from repro.kernels.secure_mask.ops import decode, encode
+    x = (10.0 ** log_scale) * jax.random.normal(
+        jax.random.PRNGKey(seed), (n,), jnp.float32)
+    x = jnp.clip(x, -0.9 * headroom(), 0.9 * headroom())
+    got = np.asarray(decode(encode(x)))
+    tol = 0.5 * resolution() + 4e-7 * np.abs(np.asarray(x)) + 1e-7
+    assert np.all(np.abs(got - np.asarray(x)) <= tol)
+
+
+@given(k=st.integers(2, 8), n_blocks=st.integers(1, 3),
+       seed=st.integers(0, 2**30))
+@settings(max_examples=15, deadline=None)
+def test_mask_cancellation_sum_identity(k, n_blocks, seed):
+    """For ANY cohort size, summing every client's masked upload cancels
+    the pairwise masks EXACTLY (ring identity, not approximately): the
+    ring sum of uploads equals the ring sum of plain encodings."""
+    from repro.kernels.secure_mask.ops import LANES, encode, masked_encode
+    from repro.privacy.masking import client_pairs, pair_seeds, round_key
+    n = n_blocks * LANES
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (k, n), jnp.float32)
+    seeds = pair_seeds(round_key(seed, 0), k)
+    total = jnp.zeros((n,), jnp.uint32)
+    for c in range(k):
+        peers, signs = client_pairs(k, c)
+        total = total + masked_encode(x[c], seeds[c, peers],
+                                      jnp.asarray(signs), impl="ref")
+    expect = jnp.zeros((n,), jnp.uint32)
+    for c in range(k):
+        expect = expect + encode(x[c])
+    np.testing.assert_array_equal(np.asarray(total), np.asarray(expect))
+
+
+@given(frac=st.floats(0.55, 0.95), seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_ring_boundary_overflow_wraps(frac, seed):
+    """At the ring edge: a single encode saturates, but a SUM crossing
+    2^31 ring units wraps around to the negative half — the documented
+    price of fixed-point headroom (privacy/fixed_point.py)."""
+    from repro.privacy.fixed_point import headroom
+    from repro.kernels.secure_mask.ops import decode, encode
+    edge = headroom()
+    a = jnp.float32(frac * edge)
+    # saturation: anything past the edge encodes like the edge
+    np.testing.assert_array_equal(np.asarray(encode(jnp.float32(10 * edge))),
+                                  np.asarray(encode(jnp.float32(edge))))
+    # wraparound: 2a crosses the signed boundary and re-enters at
+    # 2a - 2^(32 - frac_bits), in the negative half
+    wrapped = float(decode(encode(a) + encode(a)))
+    expect = 2.0 * float(a) - 2.0 ** 16
+    assert wrapped < 0
+    # error budget: one f32 round of x*2^16 per encode + one uint32->f32
+    # conversion, each <= 128 ring units at this magnitude
+    assert abs(wrapped - expect) <= 1.0
+
+
 def test_adamw_state_shapes():
     x = {"a": jnp.ones((3, 4)), "b": jnp.zeros((2,))}
     opt = adamw(1e-3, weight_decay=0.01)
