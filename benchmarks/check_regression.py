@@ -50,6 +50,7 @@ DEFAULT_RESULTS = [
     os.path.join(ROOT, "benchmarks", "results", "serve_throughput.json"),
     os.path.join(ROOT, "benchmarks", "results", "decode_throughput.json"),
     os.path.join(ROOT, "benchmarks", "results", "secure_agg.json"),
+    os.path.join(ROOT, "benchmarks", "results", "population_scale.json"),
 ]
 
 
@@ -85,8 +86,11 @@ def check(baseline: Dict[str, float], current: Dict[str, float], *,
             continue
         cur = current[key]
         is_ratio = key.endswith("speedup")
-        if not is_ratio and not strict:
-            continue   # absolute wall times gate only on pinned runners
+        if not is_ratio and not (strict and key.endswith("_us")):
+            # absolute wall times gate only on pinned runners; other
+            # absolutes (clients_per_sec, bytes_per_round, shape counters)
+            # have no slower-is-worse ceiling semantics — floors cover them
+            continue
         checked += 1
         if is_ratio:
             floor = base * (1.0 - threshold)

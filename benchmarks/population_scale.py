@@ -1,0 +1,97 @@
+"""Population-scale benchmark: mega-cohort rounds as one (mesh-sharded)
+dispatch.
+
+Rows (all under population_scale/ in the regression baseline):
+  clients_per_sec       — steady-state cohort training throughput: K divided
+                          by the median wall time of one full three-phase
+                          round (the number the ROADMAP's 10k-client regime
+                          scales by).
+  bytes_per_round       — metered wire bytes of one synchronous round
+                          (boundaries + phase-3 params), from the
+                          TrafficMeter, not the analytical model.
+  hbm_per_client_bytes  — per-client live parameter state: trainable
+                          (tail + prompt) + optimizer state. With the
+                          broadcast-free frozen body this is what cohort
+                          HBM actually scales with.
+  body_bytes            — the frozen body size each client would ALSO pin
+                          under the old K-broadcast regime; the HBM the
+                          unbatched-operand round saves is K * body_bytes.
+
+Runs sharded over a host mesh when more than one device is visible
+(XLA_FLAGS=--xla_force_host_platform_device_count=8), single-device vmap
+otherwise — same protocol, same bytes, different layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, row, save, time_fn
+from repro.configs import get_config
+from repro.core import ProtocolConfig, SFPromptTrainer, SplitConfig, SplitModel
+from repro.data import (DATASETS, iid_partition, stack_clients,
+                        synthetic_image_dataset)
+from repro.launch.mesh import make_host_mesh
+
+K = 16 if FAST else 32
+N_LOCAL = 8
+BATCH = 4
+
+
+def run():
+    lines = []
+    cfg = get_config("vit-base").reduced(n_layers=3, d_model=32, d_ff=48)
+    split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=2,
+                        prune_gamma=0.5, local_epochs=1)
+    model = SplitModel(cfg, split)
+    data = synthetic_image_dataset(DATASETS["cifar10-syn"], K * N_LOCAL,
+                                   seed=0, image_hw=32)
+    clients = iid_partition(data, K, seed=0)
+    batch = {kk: jnp.asarray(v) for kk, v in
+             stack_clients(clients, list(range(K))).items()}
+    pcfg = ProtocolConfig(clients_per_round=K, local_epochs=1,
+                          batch_size=BATCH, momentum=0.0)
+    n_dev = jax.device_count()
+    mesh = make_host_mesh() if n_dev > 1 else None
+    tr = SFPromptTrainer(model, pcfg, mesh=mesh)
+    state = tr.init(jax.random.PRNGKey(0))
+
+    t_round = time_fn(lambda: tr.round(state, batch),
+                      iters=3 if FAST else 5, warmup=1)
+    clients_per_sec = K / (t_round * 1e-6)
+
+    meter_before = dict(tr.meter.totals)
+    _, metrics = tr.round(state, batch)
+    bytes_per_round = sum(tr.meter.totals[n] - meter_before[n]
+                          for n in tr.meter.totals)
+
+    params = state["params"]
+    trainable_one = {"tail": params["tail"], "prompt": params["prompt"]}
+    opt_one = tr.opt_split.init(trainable_one)
+    nbytes = lambda t: float(sum(x.size * x.dtype.itemsize
+                                 for x in jax.tree.leaves(t)))
+    hbm_per_client = nbytes(trainable_one) + nbytes(opt_one)
+    body_bytes = nbytes(params["body"])
+
+    out = {"population_scale": {
+        "clients_per_sec": clients_per_sec,
+        "round_us": t_round,
+        "bytes_per_round": bytes_per_round,
+        "hbm_per_client_bytes": hbm_per_client,
+        "body_bytes": body_bytes,
+        "k": float(K),
+        "devices": float(n_dev),
+    }}
+    lines.append(row("population/round", t_round,
+                     f"K={K} devices={n_dev} "
+                     f"clients_per_sec={clients_per_sec:.1f}"))
+    lines.append(row("population/wire", bytes_per_round,
+                     f"bytes_per_round={bytes_per_round:.0f} "
+                     f"hbm_per_client={hbm_per_client:.0f}B "
+                     f"body_saved={K * body_bytes / 2**20:.1f}MB"))
+    save("population_scale", out)
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -30,6 +30,8 @@ SUITES = {
                "decode fast path: scan stepping + decode attention"),
     "secure": ("benchmarks.secure_agg",
                "privacy engine: secure-agg overhead + mask kernel"),
+    "population": ("benchmarks.population_scale",
+                   "mega-cohort rounds: clients/sec + bytes/round"),
     "accuracy": ("benchmarks.accuracy", "Table 3 / Fig 4"),
     "prompt_length": ("benchmarks.prompt_length", "Fig 5"),
     "ablation_local_loss": ("benchmarks.ablation_local_loss", "Fig 6"),

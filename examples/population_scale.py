@@ -12,6 +12,15 @@ What it shows, in order:
   3. A simulated preemption after round 2: the engine checkpoint is
      restored into a FRESH engine which finishes the run; final params are
      verified byte-identical to an uninterrupted reference run.
+
+Mega-cohort extras (the mesh-parallel path):
+  * With more than one visible device the cohort round runs as ONE sharded
+    dispatch over a host mesh — try
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 to see the K-cohort
+    spread over 8 virtual CPU devices (same numbers, different layout).
+  * --edges E routes phase 3 through the hierarchical (client -> edge ->
+    global) topology; the per-round wire report grows an `edge_global`
+    stream for the backhaul.
 """
 import argparse
 import os
@@ -25,20 +34,24 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import ProtocolConfig, SFPromptTrainer, SplitConfig, SplitModel
+from repro.core.aggregation import get_aggregator
 from repro.core.comm import cost_inputs_from, sfprompt_comm, sfprompt_compute
 from repro.data import DATASETS, synthetic_image_dataset
 from repro.fed import (ClientSampler, FederatedEngine, Population,
                        RoundScheduler, StragglerConfig)
+from repro.launch.mesh import make_host_mesh
 from repro.runtime import WireSpec
 
 
-def build_engine(cfg, split, data, args):
+def build_engine(cfg, split, data, args, mesh=None):
     pop = Population.from_partition(data, args.clients, scheme="dirichlet",
                                     alpha=0.1, seed=args.seed)
     model = SplitModel(cfg, split, WireSpec.make("int8"))
     pcfg = ProtocolConfig(clients_per_round=args.k, local_epochs=1,
                           batch_size=args.batch, momentum=0.0)
-    trainer = SFPromptTrainer(model, pcfg)
+    aggregator = (get_aggregator(n_edges=args.edges, cohort_size=args.k)
+                  if args.edges > 0 else None)
+    trainer = SFPromptTrainer(model, pcfg, aggregator, mesh=mesh)
     sampler = ClientSampler(pop.n_clients, args.k, kind="weighted",
                             seed=args.seed,
                             weights=pop.sizes.astype(float))
@@ -71,7 +84,12 @@ def main():
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--edges", type=int, default=0,
+                    help="hierarchical aggregation: number of edge "
+                         "aggregators (0 = flat; must divide K)")
     args = ap.parse_args()
+    if args.edges > 0 and args.k % args.edges != 0:
+        ap.error(f"--edges {args.edges} must divide K={args.k}")
 
     cfg = get_config("vit-base").reduced(n_layers=3, d_model=32, d_ff=64)
     split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=2,
@@ -79,25 +97,32 @@ def main():
     data = synthetic_image_dataset(DATASETS["cifar10-syn"],
                                    args.clients * 8, seed=args.seed,
                                    image_hw=32)
+    n_dev = jax.device_count()
+    mesh = make_host_mesh() if n_dev > 1 else None
+    layout = (f"one sharded dispatch over a {n_dev}-device host mesh"
+              if mesh is not None else "single-device vmap")
+    agg = (f"hierarchical ({args.edges} edges)" if args.edges > 0
+           else "flat")
     print(f"population: {args.clients} clients, K={args.k} per round, "
           f"{len(data['labels'])} samples total")
+    print(f"cohort layout: {layout}; phase-3 aggregation: {agg}")
 
     # --- uninterrupted reference
-    ref = build_engine(cfg, split, data, args)
+    ref = build_engine(cfg, split, data, args, mesh)
     ref.init(jax.random.PRNGKey(args.seed))
     run_rounds(ref, args.rounds, "reference")
     print(ref.trainer.meter.report())
 
     # --- killed-and-resumed run
     kill_at = max(1, args.rounds // 2)
-    eng = build_engine(cfg, split, data, args)
+    eng = build_engine(cfg, split, data, args, mesh)
     eng.init(jax.random.PRNGKey(args.seed))
     run_rounds(eng, kill_at, "pre-kill")
     with tempfile.TemporaryDirectory() as ckpt_dir:
         eng.save(ckpt_dir)
         print(f"--- simulated preemption after round {kill_at}; "
               f"restoring into a fresh engine ---")
-        res = build_engine(cfg, split, data, args)
+        res = build_engine(cfg, split, data, args, mesh)
         assert res.restore(ckpt_dir)
         run_rounds(res, args.rounds - kill_at, "resumed")
 

@@ -64,20 +64,65 @@ def fedavg_partial(client_trees, weights: jnp.ndarray, fallback):
     return jax.tree.map(mean, client_trees, fallback)
 
 
+def hierarchical_fedavg(client_trees, weights: jnp.ndarray, fallback,
+                        assignment, n_edges: int):
+    """Two-tier (edge -> global) weighted FedAvg.
+
+    assignment: (K,) int — the edge each client reports to (from
+    `fed.topology.EdgeTopology`); n_edges must be static under jit.
+    Tier 1 reduces each edge's survivors to a per-edge mean (survivor-
+    renormalized exactly like `fedavg_partial`); tier 2 FedAvgs the edge
+    means weighted by each edge's surviving weight mass W_e. Because
+    sum_e W_e * (S_e / W_e) / sum_e W_e == sum_k w_k x_k / sum_k w_k, the
+    result equals the flat weighted mean up to float reassociation — an
+    edge whose clients ALL dropped has W_e = 0 and is excluded; when every
+    edge drops, `fallback` is returned (the flat all-dropped semantics)."""
+    seg = jnp.asarray(assignment, jnp.int32)
+    w = weights.astype(jnp.float32)
+    w_edge = jax.ops.segment_sum(w, seg, num_segments=n_edges)     # (E,)
+    total = w_edge.sum()
+    safe_e = jnp.maximum(w_edge, 1e-9)
+    safe_t = jnp.maximum(total, 1e-9)
+
+    def mean(x, fb):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        sums = jax.ops.segment_sum(wb * x.astype(jnp.float32), seg,
+                                   num_segments=n_edges)           # (E, ...)
+        edge_means = sums / safe_e.reshape((-1,) + (1,) * (x.ndim - 1))
+        we = w_edge.reshape((-1,) + (1,) * (x.ndim - 1))
+        avg = jnp.sum(we * edge_means, axis=0) / safe_t
+        return jnp.where(total > 0, avg.astype(x.dtype), fb)
+
+    return jax.tree.map(mean, client_trees, fallback)
+
+
 def broadcast_to_clients(tree, k: int):
     """Replicate aggregated params back to K per-client copies."""
+    if k <= 0:
+        raise ValueError(
+            f"broadcast_to_clients needs a positive cohort size, got k={k} "
+            "— an empty-leading-axis tree would only fail later, deep "
+            "inside the cohort vmap")
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), tree)
 
 
-def get_aggregator(secure: bool = False, **kw):
+def get_aggregator(secure: bool = False, *, n_edges: int = 0,
+                   cohort_size: int = 0, **kw):
     """The phase-3 aggregation path as a pluggable object.
 
     secure=False -> ClearAggregator (bit-identical to `fedavg_partial`,
     the seed behavior); secure=True -> the privacy engine's masked
     SecureAggregator (kwargs: frac_bits, impl, seed — see
-    repro/privacy/secure_agg.py). Imported lazily so the core layer has no
-    hard dependency on the privacy subsystem."""
+    repro/privacy/secure_agg.py). n_edges > 0 -> the hierarchical
+    (edge -> global) topology from fed/topology.py wrapping per-edge
+    clear/secure aggregators; needs cohort_size (K) to lay out the edges.
+    Imported lazily so the core layer has no hard dependency on the
+    privacy or fed subsystems."""
+    if n_edges > 0:
+        from repro.fed.topology import EdgeTopology, HierarchicalAggregator
+        return HierarchicalAggregator(
+            EdgeTopology(cohort_size, n_edges), secure=secure, **kw)
     from repro.privacy.secure_agg import ClearAggregator, SecureAggregator
     if secure:
         return SecureAggregator(**kw)

@@ -148,6 +148,45 @@ def secure_agg_breakdown(*, n_trainable: int, param_nbytes: float, K: int,
     }
 
 
+def hierarchical_edge_breakdown(*, param_nbytes: float, n_edges: int,
+                                live_edges: float) -> Dict[str, float]:
+    """Analytical backhaul bytes of one hierarchical round's tier 2, keyed
+    like the TrafficMeter's `edge_global` stream: each LIVE edge (one with
+    at least one surviving client) uploads its fp32 edge mean, and the new
+    globals broadcast down to all `n_edges` edges."""
+    return {"edge_global": (n_edges + live_edges) * param_nbytes}
+
+
+def hierarchical_secure_agg_breakdown(*, n_trainable: int,
+                                      param_nbytes: float,
+                                      edge_sizes, edge_uploads,
+                                      ) -> Dict[str, float]:
+    """Analytical wire bytes of one hierarchical SECURE round — the
+    per-edge sum of `secure_agg_breakdown` plus the tier-2 backhaul.
+
+    edge_sizes: per-edge sub-cohort sizes k_e (sum = K); edge_uploads: how
+    many of each edge's clients survived to upload. Key agreement costs
+    sum(k_e^2) pubkeys — the hierarchical win over the flat K^2 — and
+    escrow reveals pair each edge's survivors with ITS dropped clients
+    only. `params` keeps the flat shape: the fp32 downlink reaches all K
+    clients and every survivor uploads one padded ring tensor; `edge_global`
+    follows `hierarchical_edge_breakdown` with an all-dropped edge not
+    uploading its mean."""
+    totals = {"params": 0.0, "secure": 0.0}
+    live = 0.0
+    for k_e, up_e in zip(edge_sizes, edge_uploads):
+        part = secure_agg_breakdown(
+            n_trainable=n_trainable, param_nbytes=param_nbytes, K=int(k_e),
+            n_uploads=float(up_e))
+        totals["params"] += part["params"]
+        totals["secure"] += part["secure"]
+        live += float(up_e > 0)
+    totals.update(hierarchical_edge_breakdown(
+        param_nbytes=param_nbytes, n_edges=len(list(edge_sizes)),
+        live_edges=live))
+    return totals
+
+
 def serve_comm_breakdown(wire, *, d_model: int, soft_prompt_len: int,
                          requests) -> Dict[str, float]:
     """Analytical SERVING wire bytes per boundary for a request trace.

@@ -21,6 +21,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import losses, pruning
 from repro.core.aggregation import broadcast_to_clients, get_aggregator
@@ -28,7 +29,8 @@ from repro.core.local_update import dp_clip_and_noise, local_epochs
 from repro.core.split import SplitModel
 from repro.optim import Optimizer, adamw, apply_updates, sgd
 from repro.privacy.dp import DP_SEED, PrivacyAccountant
-from repro.runtime.meter import SECURE, TrafficMeter
+from repro.runtime.meter import EDGE, SECURE, TrafficMeter
+from repro.sharding.rules import cohort_pspecs, params_pspecs
 
 Params = Dict[str, Any]
 
@@ -68,11 +70,23 @@ class SFPromptTrainer:
     supports_partial = True   # round() accepts a participation dict
 
     def __init__(self, model: SplitModel, pcfg: ProtocolConfig,
-                 aggregator=None):
+                 aggregator=None, *, mesh=None, fsdp: bool = False,
+                 donate_cohort: bool = False):
         self.model = model
         self.pcfg = pcfg
         self.opt_local = make_optimizer(pcfg, pcfg.lr_local)
         self.opt_split = make_optimizer(pcfg, pcfg.lr_split)
+        # frozen segments enter the cohort vmap UNBATCHED (in_axes=None) so
+        # no K copies of the body ever materialize — except for MoE, whose
+        # ragged_dot vmap rule requires every operand batched at dim 0
+        self._batch_frozen = getattr(model.cfg, "moe", None) is not None
+        # mesh-sharded cohort dispatch: with a mesh, _round jits with
+        # explicit in/out shardings — the K axis over the ('pod','data')
+        # client plane, params replicated (or FSDP over 'data')
+        self._mesh = mesh
+        self._fsdp = fsdp
+        self._donate_cohort = donate_cohort
+        self._mesh_jit_cache: Dict[Any, Any] = {}
         # pluggable phase-3 aggregation: default is the clear path,
         # bit-identical to the seed's fedavg_partial; pass
         # aggregation.get_aggregator(secure=True) for masked secure agg
@@ -90,8 +104,65 @@ class SFPromptTrainer:
         self.meter = TrafficMeter()   # measured bytes across rounds
         self.last_client_trainable = None   # per-client (tail, prompt) of
         # the most recent round, populated iff pcfg.return_client_trainable
-        self._round_jit = jax.jit(self._round)
+        self._round_jit = jax.jit(self._round) if mesh is None else None
         self._eval_jit = jax.jit(self._eval_batches)
+
+    # ------------------------------------------------------- mesh dispatch
+    def _frozen_arg(self, tree, k: int):
+        """(operand, in_axes) for a frozen pytree entering the cohort vmap:
+        unbatched with in_axes=None by default (HBM then scales with
+        K * trainable, not K * model), K-broadcast only when a vmap rule
+        demands batched operands (MoE ragged ops)."""
+        if self._batch_frozen:
+            return broadcast_to_clients(tree, k), 0
+        return tree, None
+
+    def _sharding_tree(self, pspec_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(self._mesh, s), pspec_tree,
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+    def _build_mesh_jit(self, state, client_data, participation, init_tails):
+        """jit of _round with explicit shardings over self._mesh: ONE
+        dispatch trains the whole cohort, the K axis laid out on the
+        client plane, frozen params replicated (FSDP over 'data' when
+        enabled). donate_cohort=True additionally donates the state and
+        the K-stacked cohort buffers — only safe when the caller (the
+        FederatedEngine loop) never reuses them after the call."""
+        mesh = self._mesh
+        params = state["params"]
+        k = jax.tree.leaves(client_data)[0].shape[0]
+        state_sh = self._sharding_tree(
+            {"params": params_pspecs(params, mesh, fsdp=self._fsdp),
+             "round": PartitionSpec()})
+        data_sh = self._sharding_tree(cohort_pspecs(client_data, mesh))
+        part_sh = self._sharding_tree(cohort_pspecs(participation, mesh))
+        tails_sh = (None if init_tails is None else
+                    self._sharding_tree(cohort_pspecs(init_tails, mesh)))
+        repl = NamedSharding(mesh, PartitionSpec())
+        extras_sh: Any = {}
+        if self.pcfg.return_client_trainable:
+            proto = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct((k,) + x.shape, x.dtype),
+                {"tail": params["tail"], "prompt": params["prompt"]})
+            extras_sh = {"trainable": self._sharding_tree(
+                cohort_pspecs(proto, mesh))}
+        donate = (0, 1, 3) if self._donate_cohort else ()
+        return jax.jit(
+            self._round,
+            in_shardings=(state_sh, data_sh, part_sh, tails_sh),
+            out_shardings=(state_sh, repl, extras_sh),
+            donate_argnums=donate)
+
+    def _get_round_jit(self, state, client_data, participation, init_tails):
+        if self._mesh is None:
+            return self._round_jit
+        k = jax.tree.leaves(client_data)[0].shape[0]
+        key = (k, init_tails is None)
+        if key not in self._mesh_jit_cache:
+            self._mesh_jit_cache[key] = self._build_mesh_jit(
+                state, client_data, participation, init_tails)
+        return self._mesh_jit_cache[key]
 
     # ------------------------------------------------------------- state
     def init(self, key) -> Params:
@@ -178,11 +249,11 @@ class SFPromptTrainer:
             trainable = dict(trainable, tail=init_tails)
         metrics: Dict[str, Any] = {}
 
-        # ---- Phase 1a: local-loss self-update (vmap over clients; head
-        # broadcast for batched-operand vmap rules)
+        # ---- Phase 1a: local-loss self-update (vmap over clients; the
+        # frozen head rides UNBATCHED through in_axes=None — no K copies)
         if pcfg.use_local_loss and pcfg.local_epochs > 0:
             opt_state = jax.vmap(self.opt_local.init)(trainable)
-            head_k = broadcast_to_clients(params["head"], K)
+            head_arg, head_ax = self._frozen_arg(params["head"], K)
 
             def one_client(hd, tr, os, d):
                 return local_epochs(
@@ -190,20 +261,22 @@ class SFPromptTrainer:
                     batch_size=pcfg.batch_size, n_epochs=pcfg.local_epochs,
                     impl=pcfg.impl)
 
-            trainable, opt_state, local_loss = jax.vmap(one_client)(
-                head_k, trainable, opt_state, client_data)
+            trainable, opt_state, local_loss = jax.vmap(
+                one_client, in_axes=(head_ax, 0, 0, 0))(
+                head_arg, trainable, opt_state, client_data)
             metrics["local_loss"] = local_loss.mean()
 
         # ---- Phase 1b: EL2N pruning (vmap over clients)
         if pcfg.use_pruning and model.split.prune_gamma > 0:
-            head_k = broadcast_to_clients(params["head"], K)
+            head_arg, head_ax = self._frozen_arg(params["head"], K)
 
             def score_one(hd, tr, d):
                 return pruning.score_client_data(
                     model, hd, tr["tail"], tr["prompt"], d,
                     batch_size=pcfg.batch_size, impl=pcfg.impl)
 
-            scores = jax.vmap(score_one)(head_k, trainable, client_data)
+            scores = jax.vmap(score_one, in_axes=(head_ax, 0, 0))(
+                head_arg, trainable, client_data)
             gamma = model.split.prune_gamma
             keep = max(pcfg.batch_size,
                        n_local - int(gamma * n_local))
@@ -220,10 +293,12 @@ class SFPromptTrainer:
         else:
             pruned, keep = client_data, n_local
 
-        # ---- Phase 2: split training (vmap over clients; frozen segments
-        # broadcast so MoE ragged ops see batched operands)
+        # ---- Phase 2: split training (vmap over clients; the frozen
+        # {head, body} enter unbatched — phase-2 peak HBM scales with
+        # K * (tail + prompt + opt state), not K * body — batched only on
+        # the MoE path whose ragged_dot vmaps solely at dim 0)
         opt_state = jax.vmap(self.opt_split.init)(trainable)
-        frozen_k = broadcast_to_clients(
+        frozen_arg, frozen_ax = self._frozen_arg(
             {"head": params["head"], "body": params["body"]}, K)
         wire_keys = jax.random.split(
             jax.random.fold_in(jax.random.PRNGKey(WIRE_SEED),
@@ -232,8 +307,9 @@ class SFPromptTrainer:
         def split_one(fz, tr, os, d, wk):
             return self._split_epochs(fz, tr, os, d, wk)
 
-        trainable, opt_state, split_loss, wire = jax.vmap(split_one)(
-            frozen_k, trainable, opt_state, pruned, wire_keys)
+        trainable, opt_state, split_loss, wire = jax.vmap(
+            split_one, in_axes=(frozen_ax, 0, 0, 0, 0))(
+            frozen_arg, trainable, opt_state, pruned, wire_keys)
         metrics["split_loss"] = split_loss.mean()
         transmit = participation["transmit"].astype(jnp.float32)
         for name, per_client in wire.items():
@@ -245,8 +321,9 @@ class SFPromptTrainer:
         # the broadcast globals, add calibrated Gaussian noise — BEFORE the
         # server (or the masked aggregator) ever sees the upload
         if pcfg.dp_clip > 0:
-            reference = broadcast_to_clients(
-                {"tail": params["tail"], "prompt": params["prompt"]}, K)
+            # the reference is pure tree arithmetic (no model ops), so it
+            # rides unbatched on every architecture
+            reference = {"tail": params["tail"], "prompt": params["prompt"]}
             dp_keys = jax.random.split(
                 jax.random.fold_in(jax.random.PRNGKey(DP_SEED),
                                    state["round"]), K)
@@ -256,8 +333,8 @@ class SFPromptTrainer:
                     tr, ref, dk, l2_clip=pcfg.dp_clip,
                     noise_multiplier=pcfg.dp_noise_multiplier)
 
-            trainable, dp_norm = jax.vmap(dp_one)(trainable, reference,
-                                                  dp_keys)
+            trainable, dp_norm = jax.vmap(dp_one, in_axes=(0, None, 0))(
+                trainable, reference, dp_keys)
             metrics["dp/delta_norm"] = dp_norm.mean()
 
         # ---- Phase 3: participation-corrected weighted FedAvg of
@@ -278,12 +355,17 @@ class SFPromptTrainer:
             x.size * x.dtype.itemsize
             for x in jax.tree.leaves(fallback)))
         if agg_wire:
-            # secure path: fp32 broadcast down to all K, metered masked
-            # uploads up (ring padding included), key-agreement + escrow
-            # reveals on their own stream
-            metrics["wire/params_bytes"] = (K * param_bytes
-                                            + agg_wire["params_up"])
-            metrics[f"wire/{SECURE}_bytes"] = agg_wire[SECURE]
+            # metered aggregator: fp32 broadcast down to all K; the uplink
+            # is whatever the aggregator metered (masked ring uploads on
+            # the secure path) or the clear survivors-only default; key
+            # agreement / escrow reveals and the hierarchical edge->global
+            # backhaul ride their own streams
+            up = agg_wire.get("params_up", n_up * param_bytes)
+            metrics["wire/params_bytes"] = K * param_bytes + up
+            if SECURE in agg_wire:
+                metrics[f"wire/{SECURE}_bytes"] = agg_wire[SECURE]
+            if EDGE in agg_wire:
+                metrics[f"wire/{EDGE}_bytes"] = agg_wire[EDGE]
         else:
             # clear path: (tail, prompt) travel server->client for all K at
             # round start and client->server only for the survivors
@@ -307,8 +389,10 @@ class SFPromptTrainer:
             K = jax.tree.leaves(client_data)[0].shape[0]
             ones = jnp.ones((K,), jnp.float32)
             participation = {"transmit": ones, "aggregate": ones}
-        state, metrics, extras = self._round_jit(state, client_data,
-                                                 participation, init_tails)
+        round_jit = self._get_round_jit(state, client_data, participation,
+                                        init_tails)
+        state, metrics, extras = round_jit(state, client_data,
+                                           participation, init_tails)
         self.last_client_trainable = extras.get("trainable")
         metrics = {k: float(v) for k, v in metrics.items()}
         if self.accountant is not None:

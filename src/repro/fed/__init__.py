@@ -13,6 +13,9 @@ stragglers, and resumable rounds.
                   protocol's partial FedAvg and wire metering consume.
   engine.py     — `FederatedEngine`: the sample -> gather -> schedule ->
                   train -> checkpoint loop, resumable byte-identically.
+  topology.py   — `EdgeTopology` + `HierarchicalAggregator`: two-tier
+                  (client -> edge -> global) aggregation with per-edge
+                  secure-agg instances and metered backhaul bytes.
 """
 from repro.fed.engine import FederatedEngine  # noqa: F401
 from repro.fed.population import Population  # noqa: F401
@@ -20,3 +23,5 @@ from repro.fed.sampler import SAMPLER_KINDS, ClientSampler  # noqa: F401
 from repro.fed.scheduler import (  # noqa: F401
     LINK_REGIMES, FullParticipationScheduler, RoundPlan, RoundScheduler,
     StragglerConfig)
+from repro.fed.topology import (  # noqa: F401
+    EdgeTopology, HierarchicalAggregator)

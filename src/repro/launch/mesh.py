@@ -25,6 +25,24 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_host_mesh(n: int = 0):
+    """1-D ('data',) mesh over this host's visible devices — the off-TPU
+    stand-in for the production client plane. With
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 (set BEFORE jax
+    initializes; see launch/dryrun.py) a CPU host exposes 8 virtual
+    devices, so sharded-cohort lowering is testable without silicon.
+    n=0 uses every visible device."""
+    devices = jax.devices()
+    n = len(devices) if n <= 0 else n
+    if n > len(devices):
+        raise ValueError(
+            f"requested a {n}-device host mesh but only {len(devices)} "
+            "device(s) are visible — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count before jax "
+            "initializes")
+    return jax.make_mesh((n,), ("data",), devices=devices[:n])
+
+
 def data_parallel_size(mesh) -> int:
     size = mesh.shape["data"]
     if "pod" in mesh.shape:

@@ -62,7 +62,18 @@ def build_data(args, cfg):
     return population, test
 
 
-def build_trainer(args, model):
+def build_mesh(args):
+    """Host mesh for sharded-cohort dispatch (--mesh-devices). The K axis
+    then shards over the mesh's client plane; 0 keeps single-device vmap.
+    On CPU, XLA_FLAGS=--xla_force_host_platform_device_count=N must be in
+    the environment BEFORE jax initializes for N virtual devices."""
+    if not args.mesh_devices:
+        return None
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(0 if args.mesh_devices < 0 else args.mesh_devices)
+
+
+def build_trainer(args, model, mesh=None):
     if args.method.startswith("sfprompt"):
         dp_noise = 0.0
         if args.dp_epsilon > 0:
@@ -79,9 +90,20 @@ def build_trainer(args, model):
             return_client_trainable=args.personalize_tails,
             dp_clip=(args.dp_clip if args.dp_epsilon > 0 else 0.0),
             dp_noise_multiplier=dp_noise, dp_delta=args.dp_delta)
-        aggregator = (get_aggregator(secure=True, seed=args.seed)
-                      if args.secure_agg else None)
-        return SFPromptTrainer(model, pcfg, aggregator)
+        if args.edges > 0:
+            # hierarchical (client -> edge -> global) aggregation; on the
+            # secure path each edge runs its own masked aggregator
+            kw = {"seed": args.seed} if args.secure_agg else {}
+            aggregator = get_aggregator(secure=args.secure_agg,
+                                        n_edges=args.edges,
+                                        cohort_size=args.k, **kw)
+        elif args.secure_agg:
+            aggregator = get_aggregator(secure=True, seed=args.seed)
+        else:
+            aggregator = None
+        return SFPromptTrainer(model, pcfg, aggregator, mesh=mesh,
+                               fsdp=args.fsdp,
+                               donate_cohort=mesh is not None)
     if args.method == "fl":
         return FLTrainer(model, BaselineConfig(
             local_epochs=args.local_epochs, batch_size=args.batch_size,
@@ -148,6 +170,17 @@ def main():
     ap.add_argument("--personalize-tails", action="store_true",
                     help="keep each sampled client's post-round tail in "
                          "the population (sfprompt methods only)")
+    ap.add_argument("--mesh-devices", type=int, default=0,
+                    help="shard the cohort round over a host mesh of this "
+                         "many devices (-1 = all visible; 0 = single-"
+                         "device vmap). On CPU export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="FSDP-shard large frozen params over the mesh's "
+                         "data axis instead of replicating them")
+    ap.add_argument("--edges", type=int, default=0,
+                    help="hierarchical aggregation over this many edge "
+                         "aggregators (0 = flat); K must divide evenly")
     ap.add_argument("--secure-agg", action="store_true",
                     help="masked secure aggregation: the server sums "
                          "blinded uint32 ring uploads it cannot invert "
@@ -192,6 +225,14 @@ def main():
         ap.error("--secure-agg/--dp-epsilon need an sfprompt method — the "
                  "privacy engine plugs into the SFPrompt phase-3 "
                  "aggregation path")
+    if ((args.mesh_devices or args.edges or args.fsdp)
+            and not args.method.startswith("sfprompt")):
+        ap.error("--mesh-devices/--edges/--fsdp need an sfprompt method — "
+                 "only the SFPrompt trainer dispatches sharded cohorts "
+                 "and hierarchical aggregation")
+    if args.edges > 0 and args.k % args.edges != 0:
+        ap.error(f"--k {args.k} must divide evenly into --edges "
+                 f"{args.edges} contiguous blocks")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -209,7 +250,7 @@ def main():
             f"// --clients {args.clients}); lower --batch-size or raise "
             f"--samples")
 
-    trainer = build_trainer(args, model)
+    trainer = build_trainer(args, model, build_mesh(args))
     engine = build_engine(args, trainer, population, cfg, split)
     ckpt_dir = os.path.join(args.out, "ckpt")
 

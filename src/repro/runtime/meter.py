@@ -23,14 +23,16 @@ from typing import Dict, Iterable, Mapping, Optional
 
 from repro.runtime.boundary import BOUNDARY_NAMES
 
-PARAMS = "params"   # phase-3 (tail, prompt) up+down traffic
-SECURE = "secure"   # secure-agg key agreement + escrow-reveal traffic
+PARAMS = "params"       # phase-3 (tail, prompt) up+down traffic
+SECURE = "secure"       # secure-agg key agreement + escrow-reveal traffic
+EDGE = "edge_global"    # hierarchical tier-2: edge-mean up + global down
 MB = 2 ** 20
 
 
 class TrafficMeter:
     def __init__(self,
-                 names: Iterable[str] = BOUNDARY_NAMES + (PARAMS, SECURE)):
+                 names: Iterable[str] = BOUNDARY_NAMES + (PARAMS, SECURE,
+                                                          EDGE)):
         self.names = tuple(names)
         self.totals: Dict[str, float] = {n: 0.0 for n in self.names}
         self.rounds = 0

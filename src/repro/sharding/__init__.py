@@ -1,2 +1,3 @@
 from repro.sharding.rules import (  # noqa: F401
-    batch_pspec, cache_pspecs, params_pspecs, guard_divisibility)
+    batch_pspec, cache_pspecs, cohort_pspecs, params_pspecs,
+    guard_divisibility)

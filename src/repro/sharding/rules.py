@@ -54,13 +54,22 @@ def _rule_for(path: str) -> Tuple:
 
 def guard_divisibility(spec: Tuple, shape: Tuple[int, ...],
                        mesh: Mesh) -> P:
-    """Drop axis assignments whose dim is not divisible by the axis size."""
+    """Drop axis assignments whose dim is not divisible by the axis size.
+    Axes the mesh does not have at all (e.g. 'model' rules on a data-only
+    host mesh) are dropped the same way — the rule tables stay mesh-shape
+    agnostic and lowering is correct-by-construction."""
     out = []
     for dim, axis in zip(shape, spec):
         if axis is None:
             out.append(None)
             continue
-        axes = axis if isinstance(axis, tuple) else (axis,)
+        axes = tuple(a for a in
+                     (axis if isinstance(axis, tuple) else (axis,))
+                     if a in mesh.shape)
+        if not axes:
+            out.append(None)
+            continue
+        axis = axes if len(axes) > 1 else axes[0]
         size = int(np.prod([mesh.shape[a] for a in axes]))
         out.append(axis if dim % size == 0 and dim > 0 else None)
     return P(*out)
@@ -118,6 +127,28 @@ def params_pspecs(params_shape: Any, mesh: Mesh, *,
         return P(*guarded)
 
     return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def cohort_pspecs(cohort_shape: Any, mesh: Mesh) -> Any:
+    """Pytree of PartitionSpec for COHORT tensors — anything carrying a
+    leading client axis K (stacked per-client trainables/opt state, the
+    gathered (K, n_local, ...) client data, (K,) participation vectors).
+    The K axis shards over the client plane ('pod','data' — whichever the
+    mesh has); every other dim is replicated. Divisibility-guarded, so a
+    K that does not divide the plane falls back to replication instead of
+    failing to lower."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    data_axes = data_axes if len(data_axes) > 1 else (
+        data_axes[0] if data_axes else None)
+
+    def leaf_spec(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        spec = (data_axes,) + (None,) * (len(shape) - 1)
+        return guard_divisibility(spec, shape, mesh)
+
+    return jax.tree.map(leaf_spec, cohort_shape)
 
 
 def batch_pspec(batch_shape: Any, mesh: Mesh, *,
