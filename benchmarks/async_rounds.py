@@ -1,0 +1,91 @@
+"""Async round throughput: buffered-async runtime vs synchronous barrier.
+
+Simulates BOTH runtimes clock-only (no training steps) under the `wan`
+link regime (25 Mbps consumer uplinks, `fed.scheduler.LINK_REGIMES`) with
+the same per-client latency distribution:
+
+  * sync barrier — every round waits for the slowest of its K sampled
+    clients (FederatedEngine's implicit semantics with no deadline), so
+    the straggler tail of the whole cohort gates every aggregation;
+  * buffered async — `AsyncRoundEngine` in clock-only mode (trainer=None):
+    `concurrency` dispatch groups of `group_size` clients stream arrivals
+    into a `buffer_size` buffer; the tail is paid per GROUP and groups
+    overlap, so contributions/second go up.
+
+The gated metric is `async_rounds/throughput_speedup` (contributions per
+simulated second, async / sync) — machine-independent (pure simulation),
+with a HARD floor of 1.5x in BENCH_kernels.json. The analytical twin
+(`core.comm.async_vs_sync_round_time`, lognormal order statistics) is
+reported alongside as `model_speedup` for a sim-vs-model crosscheck.
+"""
+from __future__ import annotations
+
+from benchmarks.common import FAST, row, save
+from repro.core.comm import async_vs_sync_round_time
+from repro.fed import AsyncConfig, AsyncRoundEngine, ClientSampler
+from repro.fed.scheduler import (LINK_REGIMES, RoundScheduler,
+                                 StragglerConfig)
+
+N_CLIENTS = 512
+K = 32            # sync cohort == async clients in flight (fair compare)
+GROUP = 4
+CONCURRENCY = 8   # GROUP * CONCURRENCY == K
+BUFFER = 8
+ROUND_BYTES = 1e6
+ROUND_FLOPS = 1e12
+
+
+def run():
+    scfg = StragglerConfig(regime="wan", deadline_factor=1e9)
+    n_flushes = 25 if FAST else 100
+
+    # ---- sync barrier: round time = slowest sampled client
+    sched = RoundScheduler(scfg, seed=0,
+                           round_bytes_per_client=ROUND_BYTES,
+                           round_flops_per_client=ROUND_FLOPS)
+    sampler = ClientSampler(N_CLIENTS, K, seed=0)
+    n_rounds = max(10, n_flushes * BUFFER // K)
+    t_sync, contrib_sync = 0.0, 0
+    for r in range(n_rounds):
+        plan = sched.plan(sampler.sample(r), r)
+        t_sync += float(plan.latency_s.max())
+        contrib_sync += plan.n_active
+    sync_rate = contrib_sync / t_sync
+
+    # ---- buffered async, clock-only (same latency model, tag-13 stream)
+    eng = AsyncRoundEngine(
+        None, None, ClientSampler(N_CLIENTS, K, seed=0),
+        RoundScheduler(scfg, seed=0, round_bytes_per_client=ROUND_BYTES,
+                       round_flops_per_client=ROUND_FLOPS),
+        AsyncConfig(buffer_size=BUFFER, concurrency=CONCURRENCY,
+                    group_size=GROUP))
+    eng.init(None)
+    m = eng.run_flushes(n_flushes)
+    async_rate = m["arrivals"] / m["sim_seconds"]
+    speedup = async_rate / sync_rate
+
+    regime = LINK_REGIMES["wan"]
+    twin = async_vs_sync_round_time(
+        t_comm=ROUND_BYTES / regime["R"], t_comp=ROUND_FLOPS / regime["P_C"],
+        K=K, buffer_size=BUFFER, concurrency=CONCURRENCY, group_size=GROUP,
+        link_sigma=scfg.link_sigma, speed_sigma=scfg.speed_sigma,
+        jitter_sigma=scfg.jitter_sigma)
+
+    out = {"async_rounds": {
+        "throughput_speedup": speedup,
+        "model_speedup": twin["throughput_speedup"],
+        "sync_contrib_per_s": sync_rate,
+        "async_contrib_per_s": async_rate,
+        "mean_staleness": m["mean_staleness"],
+        "max_staleness": m["max_staleness"],
+        "parallelism": eng.meter.overlap()["parallelism"],
+    }}
+    save("async_rounds", out)
+    return [row("async_rounds/throughput", 0.0,
+                f"async={async_rate:.1f}/s sync={sync_rate:.1f}/s "
+                f"speedup={speedup:.2f}x (model {twin['throughput_speedup']:.2f}x) "
+                f"staleness mean={m['mean_staleness']:.2f}")]
+
+
+if __name__ == "__main__":
+    run()

@@ -51,6 +51,7 @@ DEFAULT_RESULTS = [
     os.path.join(ROOT, "benchmarks", "results", "decode_throughput.json"),
     os.path.join(ROOT, "benchmarks", "results", "secure_agg.json"),
     os.path.join(ROOT, "benchmarks", "results", "population_scale.json"),
+    os.path.join(ROOT, "benchmarks", "results", "async_rounds.json"),
 ]
 
 
@@ -143,8 +144,16 @@ def main(argv=None) -> int:
                     help="also gate absolute _us wall times (pinned "
                          "runners only)")
     ap.add_argument("--update", action="store_true",
-                    help="rewrite the baseline from the current results")
+                    help="rewrite the baseline from the current results "
+                         "(hand-set pins and floors are preserved)")
+    ap.add_argument("--update-pins", action="store_true",
+                    help="with --update: refresh each existing pin to the "
+                         "currently measured value instead of preserving "
+                         "it — a deliberate re-anchoring, run on the "
+                         "reference machine only")
     args = ap.parse_args(argv)
+    if args.update_pins and not args.update:
+        ap.error("--update-pins only makes sense with --update")
 
     results_paths = args.results or DEFAULT_RESULTS
     current: Dict[str, float] = {}
@@ -170,8 +179,13 @@ def main(argv=None) -> int:
         prior_pins = prior.get("pins", {})
 
     if args.update:
+        pins = prior_pins
+        pins_note = f"{len(prior_pins)} pins preserved"
+        if args.update_pins:
+            pins = {k: current.get(k, v) for k, v in prior_pins.items()}
+            pins_note = f"{len(pins)} pins refreshed from this run"
         payload = {"kernels": current,
-                   "pins": prior_pins,
+                   "pins": pins,
                    "floors": prior_floors,
                    "meta": {"source": sources,
                             "threshold": args.threshold}}
@@ -179,8 +193,7 @@ def main(argv=None) -> int:
             json.dump(payload, f, indent=1, sort_keys=True)
             f.write("\n")
         print(f"wrote {args.baseline} ({len(current)} metrics, "
-              f"{len(prior_pins)} pins + {len(prior_floors)} floors "
-              f"preserved)")
+              f"{pins_note} + {len(prior_floors)} floors preserved)")
         return 0
 
     if not os.path.exists(args.baseline):

@@ -32,6 +32,8 @@ SUITES = {
                "privacy engine: secure-agg overhead + mask kernel"),
     "population": ("benchmarks.population_scale",
                    "mega-cohort rounds: clients/sec + bytes/round"),
+    "async": ("benchmarks.async_rounds",
+              "buffered-async vs sync barrier round throughput"),
     "accuracy": ("benchmarks.accuracy", "Table 3 / Fig 4"),
     "prompt_length": ("benchmarks.prompt_length", "Fig 5"),
     "ablation_local_loss": ("benchmarks.ablation_local_loss", "Fig 6"),

@@ -51,6 +51,12 @@ def fedavg_partial(client_trees, weights: jnp.ndarray, fallback):
     when the scheduler's drop process is client-independent). If EVERY
     client dropped the round is lost and `fallback` (the pre-round global
     params, no client axis) is returned unchanged — well-defined under jit.
+
+    The async runtime reuses this unchanged: a buffer flush passes its
+    staleness-scaled weights (fed/buffer.flush_weights) over the flush
+    cohort axis, and the all-zero-weight fallback is also what lets async
+    DISPATCH run through the compiled round without touching the globals
+    (core/protocol.py client_updates).
     """
     w = weights.astype(jnp.float32)
     total = w.sum()

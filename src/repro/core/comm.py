@@ -281,6 +281,74 @@ def sfprompt_latency(c: CostInputs) -> float:
     return comm + phase1 + max(client2, server2)
 
 
+# ------------------------------------------- async round-time twin
+def _lognormal_moments(t_comm: float, t_comp: float, link_sigma: float,
+                       speed_sigma: float, jitter_sigma: float):
+    """Fenton-Wilkinson fit of one client's round latency to a single
+    lognormal(mu, sigma). The simulated latency (fed/scheduler.py) is
+    (t_comm * L + t_comp * C) * J with L, C, J independent lognormals of
+    median 1 — moment-match the sum, then fold the jitter in exactly
+    (products of lognormals add mus and sigma^2s)."""
+    import math
+
+    def mv(scale, s):
+        mean = scale * math.exp(s * s / 2.0)
+        var = scale * scale * (math.exp(s * s) - 1.0) * math.exp(s * s)
+        return mean, var
+
+    m_l, v_l = mv(t_comm, link_sigma)
+    m_c, v_c = mv(t_comp, speed_sigma)
+    mean, var = m_l + m_c, v_l + v_c
+    sigma2 = math.log(1.0 + var / (mean * mean))
+    mu = math.log(mean) - sigma2 / 2.0
+    return mu, math.sqrt(sigma2 + jitter_sigma * jitter_sigma)
+
+
+def _expected_max_lognormal(n: int, mu: float, sigma: float) -> float:
+    """E[max of n iid lognormal(mu, sigma)] via the order-statistic
+    quantile approximation exp(mu + sigma * Phi^-1(n/(n+1))) — stdlib
+    only (statistics.NormalDist), no scipy in the image."""
+    import math
+    from statistics import NormalDist
+
+    if n <= 1:
+        return math.exp(mu + sigma * sigma / 2.0)
+    return math.exp(mu + sigma * NormalDist().inv_cdf(n / (n + 1.0)))
+
+
+def async_vs_sync_round_time(*, t_comm: float, t_comp: float, K: int,
+                             buffer_size: int, concurrency: int,
+                             group_size: int = 0,
+                             link_sigma: float = 0.8,
+                             speed_sigma: float = 0.4,
+                             jitter_sigma: float = 0.15,
+                             ) -> Dict[str, float]:
+    """Analytical twin of `benchmarks/async_rounds.py`: contributions/s of
+    the synchronous barrier vs the buffered-async runtime, from the same
+    latency distribution the simulated engines draw from.
+
+    Sync: every round waits for the slowest of its K sampled clients, so
+    it lands K contributions per E[max_K T] seconds. Async: `concurrency`
+    dispatch groups of `group_size` clients run independently; each group
+    cycles in E[max_g T] (the engine refills a group when its last member
+    lands), so arrivals stream at concurrency * g / E[max_g] per second —
+    the straggler tail is paid per GROUP, not per cohort, and groups
+    overlap. The ratio is the throughput speedup the benchmark gates;
+    `benchmarks/async_rounds.py --check` crosschecks simulated vs this."""
+    g = group_size or K
+    mu, sigma = _lognormal_moments(t_comm, t_comp, link_sigma,
+                                   speed_sigma, jitter_sigma)
+    t_sync = _expected_max_lognormal(K, mu, sigma)
+    t_group = _expected_max_lognormal(g, mu, sigma)
+    sync_rate = K / t_sync
+    async_rate = concurrency * g / t_group
+    return {"sync_round_s": t_sync, "async_group_s": t_group,
+            "sync_contrib_per_s": sync_rate,
+            "async_contrib_per_s": async_rate,
+            "async_flush_interval_s": buffer_size / async_rate,
+            "throughput_speedup": async_rate / sync_rate}
+
+
 def summarize(c: CostInputs) -> Dict[str, Dict[str, float]]:
     return {
         "FL": {"comm_bytes": fl_comm(c), "client_flops": fl_compute(c),
@@ -304,9 +372,9 @@ def measured_cost_inputs(model: SplitModel, *, tokens_per_sample: int,
     batch-multiple rounding, and bytes_smashed from the wire codec's real
     payload. Shared by benchmarks/comm_cost.py --check and
     tests/test_population.py so the two gates cannot drift apart."""
+    from repro.core.pruning import pruned_keep_count
     split, cfg = model.split, model.cfg
-    keep = max(batch_size, n_local - int(split.prune_gamma * n_local))
-    keep -= keep % batch_size
+    keep = pruned_keep_count(n_local, split.prune_gamma, batch_size)
     h, b, t = (model._segment_params_count(s)
                for s in ("head", "body", "tail"))
     W = h + b + t

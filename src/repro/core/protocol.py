@@ -169,6 +169,16 @@ class SFPromptTrainer:
         return {"params": self.model.init(key),
                 "round": jnp.zeros((), jnp.int32)}
 
+    def phase2_keep(self, n_local: int) -> int:
+        """Samples per client that actually train phase 2 — `n_local`
+        shrunk by EL2N pruning when it is active. Static per shape, so
+        the async engine can weight buffered contributions with exactly
+        the factor `_round` folds into its FedAvg weights."""
+        if self.pcfg.use_pruning and self.model.split.prune_gamma > 0:
+            return pruning.pruned_keep_count(
+                n_local, self.model.split.prune_gamma, self.pcfg.batch_size)
+        return n_local
+
     # ------------------------------------------------------------- phase 2
     def _split_loss(self, params_frozen, trainable, batch, wire_key):
         """Phase-2 loss with the head->body and body->tail hops crossing the
@@ -277,10 +287,7 @@ class SFPromptTrainer:
 
             scores = jax.vmap(score_one, in_axes=(head_ax, 0, 0))(
                 head_arg, trainable, client_data)
-            gamma = model.split.prune_gamma
-            keep = max(pcfg.batch_size,
-                       n_local - int(gamma * n_local))
-            keep -= keep % pcfg.batch_size
+            keep = self.phase2_keep(n_local)
             order = jnp.argsort(-scores, axis=1)[:, :keep]
             pruned = jax.tree.map(
                 lambda x: jnp.take_along_axis(
@@ -405,6 +412,36 @@ class SFPromptTrainer:
                            if k.startswith("wire/")},
                           clients=metrics.get("cohort/active"))
         return state, metrics
+
+    def client_updates(self, state: Params, client_data,
+                       transmit=None) -> Tuple[Any, Dict]:
+        """Phases 1-2 (+ the per-client DP step) for a dispatched cohort
+        WITHOUT phase-3 aggregation — the async runtime's dispatch
+        primitive. Returns (K-stacked (tail, prompt) contributions,
+        round metrics); the global params are untouched.
+
+        Implemented as the ordinary jitted round with an all-zero
+        `aggregate` vector: `fedavg_partial` then returns the pre-round
+        globals bit-exactly, so the SAME compiled round serves both the
+        synchronous barrier and async dispatch (the bit-identity the
+        async tests pin depends on this — no second lowering of phase 2
+        exists to drift). The metered `params` stream carries only the
+        K-client downlink; uploads are billed when each delta reaches
+        the server's buffer. `transmit` (K,) scales phase-2 wire bytes
+        for clients that die mid-flight (fraction sent before death).
+        Requires ProtocolConfig(return_client_trainable=True)."""
+        if not self.pcfg.return_client_trainable:
+            raise ValueError(
+                "client_updates needs ProtocolConfig("
+                "return_client_trainable=True) — without it the jitted "
+                "round aggregates and discards the per-client trees")
+        K = jax.tree.leaves(client_data)[0].shape[0]
+        if transmit is None:
+            transmit = jnp.ones((K,), jnp.float32)
+        participation = {"transmit": jnp.asarray(transmit, jnp.float32),
+                         "aggregate": jnp.zeros((K,), jnp.float32)}
+        _, metrics = self.round(state, client_data, participation)
+        return self.last_client_trainable, metrics
 
     # ------------------------------------------------------------- eval
     def _eval_batches(self, params, batched):

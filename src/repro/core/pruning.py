@@ -22,6 +22,20 @@ from repro.core import losses
 from repro.core.split import SplitModel
 
 
+def pruned_keep_count(n_local: int, prune_gamma: float,
+                      batch_size: int) -> int:
+    """How many of a client's `n_local` samples survive phase-1 pruning
+    AND actually train in phase 2: the protocol keeps
+    max(batch_size, n - floor(gamma * n)) rounded DOWN to a batch
+    multiple (the phase-2 scan consumes full batches only). One shared
+    definition for the protocol (`SFPromptTrainer._round`), the
+    analytical cost model (`comm.measured_cost_inputs`), and the async
+    runtime's flush weights — three copies of this rounding had already
+    appeared and must never drift."""
+    keep = max(batch_size, n_local - int(prune_gamma * n_local))
+    return keep - keep % batch_size
+
+
 def score_client_data(model: SplitModel, head_p, tail_p, prompt,
                       data: Dict[str, jnp.ndarray], *, batch_size: int,
                       impl: str = "ref") -> jnp.ndarray:

@@ -16,7 +16,16 @@ stragglers, and resumable rounds.
   topology.py   — `EdgeTopology` + `HierarchicalAggregator`: two-tier
                   (client -> edge -> global) aggregation with per-edge
                   secure-agg instances and metered backhaul bytes.
+  buffer.py     — `DeltaBuffer` + `StalenessLedger` + staleness weights:
+                  the bounded arrival buffer the async runtime flushes.
+  async_engine.py — `AsyncRoundEngine` + `AsyncConfig`: barrier-free
+                  buffered-async driver (FedBuff-style), clients on their
+                  own simulated clocks, staleness-weighted flushes.
 """
+from repro.fed.async_engine import (  # noqa: F401
+    AsyncConfig, AsyncRoundEngine)
+from repro.fed.buffer import (  # noqa: F401
+    BufferEntry, DeltaBuffer, StalenessLedger, staleness_weight)
 from repro.fed.engine import FederatedEngine  # noqa: F401
 from repro.fed.population import Population  # noqa: F401
 from repro.fed.sampler import SAMPLER_KINDS, ClientSampler  # noqa: F401

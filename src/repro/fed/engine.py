@@ -17,7 +17,6 @@ to the uninterrupted run (samplers and schedulers are pure functions of
 """
 from __future__ import annotations
 
-import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -133,25 +132,13 @@ class FederatedEngine:
 
     # ------------------------------------------------------------- resume
     def _trainer_fingerprint(self) -> np.int64:
-        """CRC of the trainer's hyperparameter dataclasses (ProtocolConfig
-        / BaselineConfig, SplitConfig, ModelConfig reprs) — checkpointed so
-        a resume with changed --lr/--gamma/--prompt-len/... fails loudly
-        like the sampler/scheduler/population mismatches do."""
-        parts = []
-        for attr in ("pcfg", "bcfg"):
-            if hasattr(self.trainer, attr):
-                parts.append(repr(getattr(self.trainer, attr)))
-        model = getattr(self.trainer, "model", None)
-        if model is not None:
-            parts.append(repr(getattr(model, "split", None)))
-            parts.append(repr(getattr(model, "cfg", None)))
-            parts.append(model.wire.describe())
-        aggregator = getattr(self.trainer, "aggregator", None)
-        if aggregator is not None:
-            # a clear-agg checkpoint resumed under secure agg (or with
-            # different masking params) would replay different rounds
-            parts.append(aggregator.describe())
-        return np.int64(zlib.crc32("|".join(parts).encode()))
+        """CRC of the trainer's hyperparameter dataclasses — checkpointed
+        so a resume with changed --lr/--gamma/--prompt-len/... fails
+        loudly like the sampler/scheduler/population mismatches do.
+        Shared with the async runtime: `fed.async_engine
+        .trainer_fingerprint` is the single definition."""
+        from repro.fed.async_engine import trainer_fingerprint
+        return trainer_fingerprint(self.trainer)
 
     def _run_state(self) -> Dict[str, Any]:
         state: Dict[str, Any] = {

@@ -36,11 +36,15 @@ import numpy as np
 
 # Link-rate / compute regimes (bytes/s, FLOP/s) used across the Table-1
 # latency analysis and the straggler simulation.  R is the shared uplink;
-# P_C / P_S are client / server compute rates.
+# P_C / P_S are client / server compute rates.  NOTE: resume encodes the
+# regime as an index into sorted(LINK_REGIMES), so new regimes must sort
+# AFTER the existing three (datacenter, edge_wan, fiber) or old
+# checkpoints mis-map — "wan" does.
 LINK_REGIMES: Dict[str, Dict[str, float]] = {
     "edge_wan": dict(R=12.5e6, P_C=5e12, P_S=500e12),      # 100 Mbps
     "fiber": dict(R=125e6, P_C=5e12, P_S=500e12),          # 1 Gbps
     "datacenter": dict(R=12.5e9, P_C=50e12, P_S=5000e12),
+    "wan": dict(R=3.125e6, P_C=5e12, P_S=500e12),          # 25 Mbps consumer
 }
 
 LATE_MODES = ("drop", "partial")
@@ -116,15 +120,23 @@ class RoundScheduler:
             comp[i] = np.exp(rng.normal(0.0, self.cfg.speed_sigma))
         return link, comp
 
-    def client_latency(self, client_ids: np.ndarray) -> np.ndarray:
-        """Expected round latency per client (no jitter): the Table-1 cost
-        split — bytes over the regime link rate plus FLOPs over the regime
-        client compute — scaled by that client's persistent factors."""
+    def client_latency_parts(self, client_ids: np.ndarray):
+        """(wire_s, compute_s) per client BEFORE jitter — the two addends
+        of `client_latency`, kept separate so the async runtime can bill
+        wire time and client compute time into the TrafficMeter's
+        wall-clock overlap streams independently."""
         regime = LINK_REGIMES[self.cfg.regime]
         t_comm = self.round_bytes / regime["R"]
         t_comp = self.round_flops / regime["P_C"]
         link, comp = self.client_factors(client_ids)
-        return t_comm * link + t_comp * comp
+        return t_comm * link, t_comp * comp
+
+    def client_latency(self, client_ids: np.ndarray) -> np.ndarray:
+        """Expected round latency per client (no jitter): the Table-1 cost
+        split — bytes over the regime link rate plus FLOPs over the regime
+        client compute — scaled by that client's persistent factors."""
+        wire, comp = self.client_latency_parts(client_ids)
+        return wire + comp
 
     # --------------------------------------------------------------- plan
     def plan(self, cohort: Sequence[int], round_idx: int) -> RoundPlan:

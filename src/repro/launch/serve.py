@@ -8,6 +8,13 @@ workload (Poisson arrivals, mixed prompt/output lengths, pure function of
 measured smashed-tensor wire traffic next to the analytical per-token
 model.
 
+Decode fast path knobs: `--decode-block N` steps N tokens per scanned
+dispatch (1 = per-token), `--impl` picks the decode-attention kernel
+(Pallas on TPU, grouped XLA elsewhere, `ref` = the jnp oracle), and
+`--no-donate` disables KV-cache buffer donation into the jitted steps.
+`--wire {fp32,bf16,int8}` sets the smashed-tensor codec on both
+boundaries. docs/ROUND_LIFECYCLE.md traces one token through the stack.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \\
       --requests 16 --slots 8 --tenants 4 --wire int8
 """
@@ -55,17 +62,24 @@ def personalized_bank(model: SplitModel, params, n_tenants: int,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=8)
-    ap.add_argument("--tenants", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="CPU-sized same-family config (on by default)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="synthetic workload length")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="concurrent sequences in the shared KV cache")
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="distinct (tail, prompt) pairs in the TenantBank")
+    ap.add_argument("--max-seq", type=int, default=128,
+                    help="KV-cache capacity per slot (prompt + new tokens)")
     ap.add_argument("--mean-interarrival", type=float, default=1.0,
                     help="Poisson arrival gap in engine steps")
     ap.add_argument("--prompt-choices", type=int, nargs="+",
-                    default=[8, 16, 32])
+                    default=[8, 16, 32],
+                    help="prompt lengths the workload draws from")
     ap.add_argument("--new-token-choices", type=int, nargs="+",
-                    default=[4, 8, 16])
+                    default=[4, 8, 16],
+                    help="output lengths the workload draws from")
     ap.add_argument("--decode-block", type=int, default=8,
                     help="decode fast path: tokens per scanned dispatch "
                          "(1 = per-token stepping)")
@@ -77,7 +91,9 @@ def main(argv=None):
     ap.add_argument("--no-donate", action="store_true",
                     help="disable KV-cache donation into the jitted steps")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--params", default=None, help="checkpoint to serve")
+    ap.add_argument("--params", default=None,
+                    help="checkpoint to serve (e.g. a training run's "
+                         "final.npz); default: fresh random init")
     ap.add_argument("--wire", default="fp32", choices=("fp32", "bf16", "int8"),
                     help="codec for the smashed tensors on both boundaries")
     args = ap.parse_args(argv)

@@ -4,7 +4,27 @@ Rounds run through the federated population engine: an N-client
 `Population` (N can be >> K), a deterministic `ClientSampler`, and a
 `RoundScheduler` that simulates stragglers/dropouts. Runs checkpoint the
 full round state (params, meter totals, sampler position) every
-`--ckpt-every` rounds; `--resume` restarts a killed run byte-identically.
+`--ckpt-every` rounds; `--resume` restarts a killed run byte-identically
+— including, in async mode, the delta buffer and in-flight clients.
+
+Two runtimes (docs/ROUND_LIFECYCLE.md walks both end-to-end):
+  * synchronous barrier (default) — `FederatedEngine`: every round waits
+    for its whole surviving cohort before aggregating;
+  * buffered async (`--async-buffer N`) — `AsyncRoundEngine`: sampled
+    clients stream updates on their own simulated clocks, the server
+    aggregates every N arrivals with staleness weights
+    alpha / (1 + s)^beta (`--staleness-alpha/--staleness-beta`);
+    `--async-concurrency` dispatch groups overlap, `--rounds` counts
+    FLUSHES. Composes with `--secure-agg` (the flush is the secure-agg
+    cohort) and `--dp-epsilon` (noise rides each client's update).
+
+Scale-out and privacy knobs (sfprompt methods only):
+  * `--mesh-devices M` shards the cohort round over a host mesh
+    (`--fsdp` additionally shards large frozen params over the mesh);
+  * `--edges E` aggregates hierarchically (client -> edge -> global);
+  * `--secure-agg` masks uploads (Bonawitz-style, uint32 ring);
+  * `--dp-epsilon/--dp-delta/--dp-clip` run DP-SGD on client deltas
+    with a zCDP ledger calibrated over `--rounds`.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch vit-base --reduced \\
@@ -12,12 +32,17 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --arch vit-base --reduced \\
       --clients 1000 --k 16 --sampler weighted --dropout-rate 0.2 \\
       --regime edge_wan --rounds 50 --ckpt-every 5
+  # buffered async over consumer WAN links, secure flushes
+  PYTHONPATH=src python -m repro.launch.train --arch vit-base --reduced \\
+      --clients 100 --k 8 --regime wan --async-buffer 8 \\
+      --async-concurrency 2 --secure-agg --rounds 20
   # after a crash / preemption: identical continuation
   PYTHONPATH=src python -m repro.launch.train ... --resume
 
 Methods: sfprompt (default), sfprompt-nolocal (Fig-6 ablation arm),
 fl, sfl-ff, sfl-linear (baselines train their cohort synchronously —
-the straggler plan only applies to SFPrompt's partial aggregation).
+the straggler plan and the async runtime only apply to SFPrompt's
+partial aggregation).
 """
 from __future__ import annotations
 
@@ -38,8 +63,9 @@ from repro.core.comm import cost_inputs_from, sfprompt_comm, sfprompt_compute
 from repro.privacy.dp import calibrate_noise
 from repro.data import (DATASETS, synthetic_image_dataset,
                         synthetic_lm_dataset)
-from repro.fed import (ClientSampler, FederatedEngine, Population,
-                       RoundScheduler, StragglerConfig)
+from repro.fed import (AsyncConfig, AsyncRoundEngine, ClientSampler,
+                       FederatedEngine, Population, RoundScheduler,
+                       StragglerConfig)
 from repro.fed.scheduler import LINK_REGIMES
 
 
@@ -87,10 +113,17 @@ def build_trainer(args, model, mesh=None):
             clients_per_round=args.k, local_epochs=args.local_epochs,
             batch_size=args.batch_size, lr_local=args.lr, lr_split=args.lr,
             use_local_loss=(args.method == "sfprompt"),
-            return_client_trainable=args.personalize_tails,
+            # async dispatch aggregates at flush time, from the per-client
+            # trees the round returns — same flag personalized tails use
+            return_client_trainable=(args.personalize_tails
+                                     or args.async_buffer > 0),
             dp_clip=(args.dp_clip if args.dp_epsilon > 0 else 0.0),
             dp_noise_multiplier=dp_noise, dp_delta=args.dp_delta)
-        if args.edges > 0:
+        if args.async_buffer > 0:
+            # the trainer stays CLEAR under async: the flush, not the
+            # dispatch round, is the (possibly secure) aggregation unit
+            aggregator = None
+        elif args.edges > 0:
             # hierarchical (client -> edge -> global) aggregation; on the
             # secure path each edge runs its own masked aggregator
             kw = {"seed": args.seed} if args.secure_agg else {}
@@ -113,29 +146,47 @@ def build_trainer(args, model, mesh=None):
         lr=args.lr), mode=args.method.split("-")[1])
 
 
+def build_scheduler(args, population, cfg, split):
+    """Per-client round cost from the Table-1 model bound to THIS
+    model/split — the regime's comm-vs-compute mix then decides whether
+    slow-link or slow-compute devices miss the deadline (sync) or arrive
+    stale (async)."""
+    toks = (args.seq_len if args.dataset == "lm-syn"
+            else (args.image_hw // 16) ** 2 + 1)
+    ci = cost_inputs_from(cfg, split, tokens_per_sample=toks,
+                          D=population.n_local, K=args.k,
+                          U=args.local_epochs)
+    return RoundScheduler(
+        StragglerConfig(regime=args.regime,
+                        deadline_factor=args.deadline_factor,
+                        dropout_rate=args.dropout_rate,
+                        late_mode=args.late_mode),
+        seed=args.seed,
+        round_bytes_per_client=sfprompt_comm(ci) / args.k,
+        round_flops_per_client=sfprompt_compute(ci))
+
+
 def build_engine(args, trainer, population, cfg, split):
     sampler = ClientSampler(
         population.n_clients, args.k, kind=args.sampler, seed=args.seed,
         weights=(population.sizes.astype(float)
                  if args.sampler == "weighted" else None))
+    if args.async_buffer > 0:
+        # async always needs the latency model — arrival order IS the
+        # runtime's semantics, not an optional failure simulation
+        acfg = AsyncConfig(buffer_size=args.async_buffer,
+                           concurrency=args.async_concurrency,
+                           staleness_alpha=args.staleness_alpha,
+                           staleness_beta=args.staleness_beta)
+        aggregator = (get_aggregator(secure=True, seed=args.seed)
+                      if args.secure_agg else None)
+        return AsyncRoundEngine(trainer, population, sampler,
+                                build_scheduler(args, population, cfg,
+                                                split),
+                                acfg, aggregator=aggregator)
     scheduler = None
     if args.dropout_rate > 0 or args.straggle:
-        # per-client round cost from the Table-1 model bound to THIS
-        # model/split — the regime's comm-vs-compute mix then decides
-        # whether slow-link or slow-compute devices miss the deadline
-        toks = (args.seq_len if args.dataset == "lm-syn"
-                else (args.image_hw // 16) ** 2 + 1)
-        ci = cost_inputs_from(cfg, split, tokens_per_sample=toks,
-                              D=population.n_local, K=args.k,
-                              U=args.local_epochs)
-        scheduler = RoundScheduler(
-            StragglerConfig(regime=args.regime,
-                            deadline_factor=args.deadline_factor,
-                            dropout_rate=args.dropout_rate,
-                            late_mode=args.late_mode),
-            seed=args.seed,
-            round_bytes_per_client=sfprompt_comm(ci) / args.k,
-            round_flops_per_client=sfprompt_compute(ci))
+        scheduler = build_scheduler(args, population, cfg, split)
     return FederatedEngine(trainer, population, sampler, scheduler,
                            personalize_tails=args.personalize_tails)
 
@@ -167,6 +218,18 @@ def main():
     ap.add_argument("--deadline-factor", type=float, default=1.5)
     ap.add_argument("--late-mode", default="drop",
                     choices=["drop", "partial"])
+    ap.add_argument("--async-buffer", type=int, default=0,
+                    help="buffered-async runtime: aggregate every N "
+                         "arrivals instead of at a cohort barrier (0 = "
+                         "synchronous). --rounds then counts flushes")
+    ap.add_argument("--async-concurrency", type=int, default=2,
+                    help="dispatch groups in flight at once under "
+                         "--async-buffer (>= 2 overlaps client compute)")
+    ap.add_argument("--staleness-alpha", type=float, default=1.0,
+                    help="async flush weight numerator: alpha/(1+s)^beta")
+    ap.add_argument("--staleness-beta", type=float, default=0.5,
+                    help="async staleness decay exponent (0 = uniform "
+                         "weights regardless of staleness)")
     ap.add_argument("--personalize-tails", action="store_true",
                     help="keep each sampled client's post-round tail in "
                          "the population (sfprompt methods only)")
@@ -233,6 +296,18 @@ def main():
     if args.edges > 0 and args.k % args.edges != 0:
         ap.error(f"--k {args.k} must divide evenly into --edges "
                  f"{args.edges} contiguous blocks")
+    if args.async_buffer > 0:
+        if not args.method.startswith("sfprompt"):
+            ap.error("--async-buffer needs an sfprompt method — only the "
+                     "SFPrompt trainer exposes per-client updates for "
+                     "flush-time aggregation")
+        if args.personalize_tails:
+            ap.error("--async-buffer and --personalize-tails are mutually "
+                     "exclusive (personalized tails ride the synchronous "
+                     "engine's cohort write-back)")
+        if args.edges > 0:
+            ap.error("--async-buffer with --edges is not supported: the "
+                     "flush cohort is the buffer, not an edge layout")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -254,11 +329,16 @@ def main():
     engine = build_engine(args, trainer, population, cfg, split)
     ckpt_dir = os.path.join(args.out, "ckpt")
 
+    is_async = args.async_buffer > 0
+
+    def progress():
+        return engine.version if is_async else engine.round_idx
+
     key = jax.random.PRNGKey(args.seed)
     resumed = args.resume and engine.restore(ckpt_dir)
     if resumed:
-        print(f"resumed from round {engine.round_idx} ({ckpt_dir})",
-              flush=True)
+        print(f"resumed from {'flush' if is_async else 'round'} "
+              f"{progress()} ({ckpt_dir})", flush=True)
     else:
         engine.init(key)
         if args.init_params:
@@ -281,7 +361,7 @@ def main():
             kept = []
             for line in f:
                 try:
-                    if json.loads(line).get("round", -1) < engine.round_idx:
+                    if json.loads(line).get("round", -1) < progress():
                         kept.append(line)
                 except json.JSONDecodeError:
                     pass   # torn tail line from the kill
@@ -290,16 +370,21 @@ def main():
     log = open(log_path, "a" if resumed else "w")
 
     t0 = time.time()
-    while engine.round_idx < args.rounds:
-        r = engine.round_idx
-        plan, metrics = engine.run_round()
-        ev = {}
+    while progress() < args.rounds:
+        r = progress()
+        if is_async:
+            metrics = engine.run_flushes(1)
+            metrics["t_sim"] = engine.t_sim
+            rec = {"round": r, "wall_s": round(time.time() - t0, 1),
+                   **metrics}
+        else:
+            plan, metrics = engine.run_round()
+            rec = {"round": r, "wall_s": round(time.time() - t0, 1),
+                   "cohort": plan.cohort.tolist(), **metrics}
         if hasattr(trainer, "evaluate"):
             ev = trainer.evaluate(engine.params, test,
                                   batch_size=args.batch_size)
-        rec = {"round": r, "wall_s": round(time.time() - t0, 1),
-               "cohort": plan.cohort.tolist(),
-               **metrics, **{f"eval_{k}": v for k, v in ev.items()}}
+            rec.update({f"eval_{k}": v for k, v in ev.items()})
         log.write(json.dumps(rec) + "\n")
         log.flush()
         print(rec, flush=True)
@@ -312,6 +397,11 @@ def main():
     meter = getattr(trainer, "meter", None)
     if meter is not None:
         print(meter.report())
+    if is_async:
+        print(f"async: {engine.version} flush(es) over {engine.t_sim:.1f} "
+              f"simulated s, staleness mean "
+              f"{engine.ledger.mean_staleness():.2f} "
+              f"max {engine.ledger.max_staleness}")
     accountant = getattr(trainer, "accountant", None)
     if accountant is not None:
         print(accountant.report())

@@ -30,6 +30,16 @@ TrafficMeter and `comm.secure_agg_breakdown` meter the same payloads:
 simulated DH pubkeys (PK_BYTES per client per peer), the uint32 uploads
 (RING_BYTES per padded element, survivors only), and the per-dropout seed
 reveals (SEED_BYTES per survivor x dropped pair).
+
+Async composition (fed/async_engine.py): under the buffered runtime the
+aggregation unit is the buffer FLUSH, not the dispatch round — the engine
+hands `aggregate` the flush cohort (live arrivals plus zero-weight rows
+for clients that died in the same dispatch groups) with `round_idx` set
+to the server VERSION. The zero-weight rows exercise exactly the dropout
+path above: their dangling masks are recovered from escrowed seeds, and
+the decoded sum equals the staleness-weighted clear flush. Build the
+TRAINER with ClearAggregator and pass the SecureAggregator to
+`AsyncRoundEngine(aggregator=...)`.
 """
 from __future__ import annotations
 

@@ -28,6 +28,15 @@ SECURE = "secure"       # secure-agg key agreement + escrow-reveal traffic
 EDGE = "edge_global"    # hierarchical tier-2: edge-mean up + global down
 MB = 2 ** 20
 
+# wall-clock overlap streams (simulated seconds, not bytes): how much
+# server aggregation work, client compute, and wire time the run
+# accumulated vs the simulated span it all fit into.  Under a synchronous
+# barrier span ~= sum of per-round maxima; under the async buffered
+# runtime client/wire time OVERLAPS, so their sums exceed the span — the
+# overlap() ratios make that win measurable (analytical twin:
+# core/comm.py async_vs_sync_round_time).
+WALL_STREAMS = ("server_busy_s", "client_compute_s", "wire_s", "span_s")
+
 
 class TrafficMeter:
     def __init__(self,
@@ -37,6 +46,7 @@ class TrafficMeter:
         self.totals: Dict[str, float] = {n: 0.0 for n in self.names}
         self.rounds = 0
         self.client_rounds = 0.0   # sum over rounds of active clients
+        self.wall: Dict[str, float] = {n: 0.0 for n in WALL_STREAMS}
 
     def absorb(self, counts: Mapping[str, float], *,
                clients: Optional[float] = None) -> None:
@@ -49,6 +59,27 @@ class TrafficMeter:
         self.rounds += 1
         if clients is not None:
             self.client_rounds += float(clients)
+
+    def absorb_wall(self, *, server_busy_s: float = 0.0,
+                    client_compute_s: float = 0.0, wire_s: float = 0.0,
+                    span_s: float = 0.0) -> None:
+        """Fold simulated wall-clock increments in. `span_s` is the
+        advance of the run's single simulated clock; the other three are
+        work sums that may legitimately exceed it (overlap)."""
+        self.wall["server_busy_s"] += float(server_busy_s)
+        self.wall["client_compute_s"] += float(client_compute_s)
+        self.wall["wire_s"] += float(wire_s)
+        self.wall["span_s"] += float(span_s)
+
+    def overlap(self) -> Dict[str, float]:
+        """Wall-clock utilization ratios: work-seconds per span-second
+        for each stream, plus their sum (`parallelism` — 1.0 means the
+        run was fully serial, > 1 means client compute and wire time
+        overlapped across clients / with the server)."""
+        span = max(self.wall["span_s"], 1e-12)
+        out = {k: v / span for k, v in self.wall.items() if k != "span_s"}
+        out["parallelism"] = sum(out.values())
+        return out
 
     def total_bytes(self) -> float:
         return sum(self.totals.values())
@@ -78,6 +109,8 @@ class TrafficMeter:
         state = {f"totals/{n}": v for n, v in self.totals.items()}
         state["rounds"] = float(self.rounds)
         state["client_rounds"] = self.client_rounds
+        for n, v in self.wall.items():
+            state[f"wall/{n}"] = v
         return state
 
     def load_state_dict(self, state: Mapping[str, float]) -> None:
@@ -87,6 +120,9 @@ class TrafficMeter:
                 self.totals[n] = float(state[key])
         self.rounds = int(state["rounds"])
         self.client_rounds = float(state["client_rounds"])
+        for n in self.wall:
+            # absent in pre-async checkpoints: zero, not an error
+            self.wall[n] = float(state.get(f"wall/{n}", 0.0))
 
     def report(self) -> str:
         lines = [f"wire traffic over {self.rounds} round(s):"]
@@ -96,4 +132,12 @@ class TrafficMeter:
             per = self.per_client_round()["total"]
             lines.append(f"  ({self.client_rounds:.0f} active "
                          f"client-rounds, {per / MB:.3f} MB each)")
+        if self.wall["span_s"] > 0:
+            ov = self.overlap()
+            lines.append(
+                f"wall clock over {self.wall['span_s']:.1f} simulated s: "
+                f"server {self.wall['server_busy_s']:.1f}s, client "
+                f"compute {self.wall['client_compute_s']:.1f}s, wire "
+                f"{self.wall['wire_s']:.1f}s "
+                f"(parallelism {ov['parallelism']:.2f}x)")
         return "\n".join(lines)

@@ -1,0 +1,309 @@
+"""Buffered-async runtime: sync bit-equivalence at buffer == cohort,
+byte-identical resume through a non-empty buffer and in-flight clients,
+staleness-weight semantics, secure-agg flush cohorts under mid-flush
+dropout, and the meter's wall-clock overlap accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ProtocolConfig, SFPromptTrainer, SplitConfig, SplitModel
+from repro.core.aggregation import get_aggregator
+from repro.data import DATASETS, synthetic_image_dataset
+from repro.fed import (AsyncConfig, AsyncRoundEngine, ClientSampler,
+                       FederatedEngine, Population, RoundScheduler,
+                       StragglerConfig)
+from repro.fed.buffer import (BufferEntry, DeltaBuffer, StalenessLedger,
+                              flush_weights, staleness_weight)
+from repro.privacy.fixed_point import roundtrip_tol
+from repro.runtime import WireSpec
+from repro.runtime.meter import TrafficMeter
+
+KEY = jax.random.PRNGKey(0)
+N_CLIENTS = 40
+N_LOCAL = 8
+BATCH = 4
+K = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("vit-base").reduced(n_layers=3, d_model=32, d_ff=64)
+    split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=2,
+                        prune_gamma=0.3, local_epochs=1)
+    data = synthetic_image_dataset(DATASETS["cifar10-syn"],
+                                   N_CLIENTS * N_LOCAL, seed=0, image_hw=32)
+    return cfg, split, data
+
+
+def make_trainer(cfg, split, *, return_client=True):
+    model = SplitModel(cfg, split, WireSpec.make("fp32"))
+    pcfg = ProtocolConfig(clients_per_round=K, local_epochs=1,
+                          batch_size=BATCH, momentum=0.0,
+                          return_client_trainable=return_client)
+    return SFPromptTrainer(model, pcfg)
+
+
+def make_pop(data):
+    return Population.from_partition(data, N_CLIENTS, scheme="dirichlet",
+                                     alpha=0.1, seed=0)
+
+
+def wan_sched(seed=3, dropout=0.0):
+    return RoundScheduler(StragglerConfig(regime="wan", dropout_rate=dropout),
+                          seed=seed, round_bytes_per_client=1e6,
+                          round_flops_per_client=1e12)
+
+
+def leaves_equal(a, b):
+    la = jax.tree.leaves(jax.tree.map(np.asarray, a))
+    lb = jax.tree.leaves(jax.tree.map(np.asarray, b))
+    return len(la) == len(lb) and all(
+        np.array_equal(x, y) for x, y in zip(la, lb))
+
+
+# ------------------------------------------------- sync equivalence anchor
+def test_async_buffer_eq_cohort_matches_sync_bitwise(setup):
+    """buffer_size == K, concurrency 1, beta 0: one flush IS one sync
+    round — aggregated params and every metered byte stream identical."""
+    cfg, split, data = setup
+
+    tr_s = make_trainer(cfg, split)
+    sync = FederatedEngine(tr_s, make_pop(data), ClientSampler(N_CLIENTS, K,
+                                                               seed=3))
+    sync.init(KEY)
+    sync.run_round()
+
+    tr_a = make_trainer(cfg, split)
+    eng = AsyncRoundEngine(tr_a, make_pop(data),
+                           ClientSampler(N_CLIENTS, K, seed=3),
+                           acfg=AsyncConfig(buffer_size=K, concurrency=1,
+                                            staleness_beta=0.0))
+    eng.init(KEY)
+    stats = eng.run_flushes(1)
+
+    assert stats["flushes"] == 1 and stats["arrivals"] == K
+    assert stats["max_staleness"] == 0
+    assert leaves_equal(sync.params, eng.params)
+    sm, am = tr_s.meter.as_dict(), eng.meter.as_dict()
+    assert set(sm) <= set(am)
+    for k in sm:
+        assert sm[k] == am[k], f"meter stream {k}: {sm[k]} != {am[k]}"
+
+
+def test_async_rejects_misconfigured_trainer(setup):
+    cfg, split, data = setup
+    sampler = ClientSampler(N_CLIENTS, K, seed=3)
+    with pytest.raises(ValueError, match="return_client_trainable"):
+        AsyncRoundEngine(make_trainer(cfg, split, return_client=False),
+                         make_pop(data), sampler)
+    with pytest.raises(ValueError, match="CLEAR aggregator"):
+        model = SplitModel(cfg, split, WireSpec.make("fp32"))
+        pcfg = ProtocolConfig(clients_per_round=K, local_epochs=1,
+                              batch_size=BATCH, momentum=0.0,
+                              return_client_trainable=True)
+        tr = SFPromptTrainer(model, pcfg,
+                             get_aggregator(secure=True, seed=0))
+        AsyncRoundEngine(tr, make_pop(data), sampler)
+    with pytest.raises(ValueError, match="group_size"):
+        AsyncRoundEngine(None, None, sampler,
+                         acfg=AsyncConfig(group_size=K + 1))
+
+
+# ------------------------------------------------------------------ resume
+def test_resume_byte_identical_with_nonempty_buffer(setup, tmp_path):
+    """Kill mid-flush (entries buffered, clients in flight), restore into
+    a FRESH engine, drive both to the same flush count as an
+    uninterrupted reference: params, meter, clock, ledger all identical."""
+    cfg, split, data = setup
+    acfg = AsyncConfig(buffer_size=3, concurrency=2, staleness_beta=0.5)
+
+    def mk():
+        return AsyncRoundEngine(make_trainer(cfg, split), make_pop(data),
+                                ClientSampler(N_CLIENTS, K, seed=3),
+                                wan_sched(dropout=0.2), acfg)
+
+    ref = mk()
+    ref.init(KEY)
+    ref.run_flushes(4)
+
+    a = mk()
+    a.init(KEY)
+    a.run_flushes(2)
+    a.step_event()
+    a.step_event()
+    assert len(a.buffer) > 0 and len(a.in_flight) > 0
+    a.save(str(tmp_path))
+
+    b = mk()
+    assert b.restore(str(tmp_path))
+    assert len(b.buffer.entries) == len(a.buffer.entries)
+    assert len(b.in_flight) == len(a.in_flight)
+    while a.version < 4:
+        a.step_event()
+    while b.version < 4:
+        b.step_event()
+
+    for other in (a, b):
+        assert leaves_equal(ref.params, other.params)
+        assert other.t_sim == ref.t_sim
+        assert other.arrivals == ref.arrivals
+        rm, om = ref.meter.state_dict(), other.meter.state_dict()
+        assert set(rm) == set(om)
+        for k in rm:
+            assert rm[k] == om[k], f"meter stream {k}"
+        np.testing.assert_array_equal(ref.ledger.applied, other.ledger.applied)
+    assert ref.ledger.mean_staleness() == b.ledger.mean_staleness()
+
+
+def test_resume_refuses_mismatched_config(setup, tmp_path):
+    cfg, split, data = setup
+    a = AsyncRoundEngine(make_trainer(cfg, split), make_pop(data),
+                         ClientSampler(N_CLIENTS, K, seed=3),
+                         wan_sched(), AsyncConfig(buffer_size=3))
+    a.init(KEY)
+    a.run_flushes(1)
+    a.save(str(tmp_path))
+    b = AsyncRoundEngine(make_trainer(cfg, split), make_pop(data),
+                         ClientSampler(N_CLIENTS, K, seed=3),
+                         wan_sched(), AsyncConfig(buffer_size=4))
+    with pytest.raises(ValueError, match="buffer_size"):
+        b.restore(str(tmp_path))
+    c = AsyncRoundEngine(None, None, ClientSampler(N_CLIENTS, K, seed=3),
+                         wan_sched(), AsyncConfig(buffer_size=3))
+    with pytest.raises(ValueError, match="fingerprint|clock-only"):
+        c.restore(str(tmp_path))
+
+
+# ---------------------------------------------------------------- staleness
+def test_staleness_weight_monotone_and_normalized():
+    s = np.arange(0, 8)
+    w = staleness_weight(s, alpha=1.0, beta=0.5)
+    assert w[0] == 1.0                       # fresh update: full weight
+    assert np.all(np.diff(w) < 0)            # strictly decreasing in s
+    np.testing.assert_allclose(
+        staleness_weight(s, alpha=1.0, beta=0.0), np.ones_like(w))
+    np.testing.assert_allclose(
+        staleness_weight(s, alpha=0.25, beta=0.0), 0.25 * np.ones_like(w))
+    # steeper decay never crosses a flatter one
+    w2 = staleness_weight(s, alpha=1.0, beta=2.0)
+    assert np.all(w2[1:] < w[1:])
+
+
+def test_flush_weights_zero_dropped_and_scale_staleness():
+    def entry(cid, version, *, dropped=False, size=8, keep=6):
+        return BufferEntry(client_id=cid, dispatch_idx=0, position=cid,
+                           version=version, arrival_t=float(cid),
+                           dropped=dropped, size=size, keep=keep,
+                           contribution=None)
+
+    entries = [entry(0, 3), entry(1, 1), entry(2, 3, dropped=True)]
+    w = flush_weights(entries, alpha=1.0, beta=0.5, version=3)
+    assert w.dtype == np.float32
+    assert w[2] == 0.0                       # dropped row contributes nothing
+    # staleness 0 vs 2 at identical (size, keep): fresher weighs more
+    assert w[0] > w[1] > 0.0
+    np.testing.assert_allclose(
+        w[1] / w[0], staleness_weight(2, alpha=1.0, beta=0.5), rtol=1e-6)
+
+
+def test_buffer_full_counts_live_entries_only():
+    buf = DeltaBuffer(buffer_size=2)
+
+    def entry(cid, *, dropped):
+        return BufferEntry(client_id=cid, dispatch_idx=cid, position=0,
+                           version=0, arrival_t=0.0, dropped=dropped,
+                           size=8, keep=6, contribution=None)
+
+    buf.append(entry(0, dropped=True))
+    buf.append(entry(1, dropped=False))
+    assert not buf.full                      # one live entry out of two
+    buf.append(entry(2, dropped=False))
+    assert buf.full
+    drained = buf.drain()
+    assert [e.client_id for e in drained] == [0, 1, 2]   # dispatch order
+    assert len(buf) == 0
+
+
+def test_ledger_tracks_applied_staleness():
+    led = StalenessLedger(4)
+    led.record(0, 0)
+    led.record(1, 3)
+    led.record(0, 1)
+    assert led.mean_staleness() == pytest.approx(4 / 3)
+    assert led.max_staleness == 3
+    fresh = StalenessLedger(4)
+    fresh.load_state_dict(led.state_dict())
+    assert fresh.mean_staleness() == led.mean_staleness()
+    with pytest.raises(ValueError):
+        StalenessLedger(5).load_state_dict(led.state_dict())
+
+
+# ------------------------------------------------------------- secure flush
+def test_secure_flush_matches_clear_under_dropout(setup):
+    """The flush cohort is the secure-agg unit: with mid-flush dropouts
+    (zero-weight rows exercising dangling-mask recovery) the first flush
+    through the masked ring stays within fixed-point tolerance of the
+    clear flush, and bills a non-zero secure stream."""
+    cfg, split, data = setup
+    acfg = AsyncConfig(buffer_size=3, concurrency=2, staleness_beta=0.5)
+
+    def mk(aggregator=None):
+        eng = AsyncRoundEngine(make_trainer(cfg, split), make_pop(data),
+                               ClientSampler(N_CLIENTS, K, seed=3),
+                               wan_sched(dropout=0.3, seed=3), acfg,
+                               aggregator=aggregator)
+        eng.init(KEY)
+        eng.run_flushes(1)
+        return eng
+
+    clear = mk()
+    secure = mk(get_aggregator(secure=True, seed=0))
+    # identical clocks and cohorts — only the aggregation path differs
+    assert secure.t_sim == clear.t_sim
+    assert secure.arrivals == clear.arrivals
+    err = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                    - b.astype(jnp.float32))))
+              for a, b in zip(jax.tree.leaves(clear.params),
+                              jax.tree.leaves(secure.params)))
+    assert err <= roundtrip_tol(acfg.buffer_size)
+    assert secure.meter.as_dict().get("secure", 0.0) > 0.0
+    # the secure path bills its own uplink at flush time; totals must not
+    # double-count the clear per-arrival billing
+    assert secure.meter.as_dict()["params"] > 0.0
+
+
+# ------------------------------------------------------- wall-clock streams
+def test_meter_wall_overlap_accounting():
+    m = TrafficMeter()
+    m.absorb_wall(client_compute_s=3.0, wire_s=1.0, span_s=2.0)
+    m.absorb_wall(server_busy_s=0.5, span_s=2.0)
+    ov = m.overlap()
+    assert ov["client_compute_s"] == pytest.approx(3.0 / 4.0)
+    assert ov["wire_s"] == pytest.approx(1.0 / 4.0)
+    assert ov["server_busy_s"] == pytest.approx(0.5 / 4.0)
+    assert ov["parallelism"] == pytest.approx(4.5 / 4.0)
+    # round-trips through state_dict, including into a pre-wall-era state
+    fresh = TrafficMeter()
+    fresh.load_state_dict(m.state_dict())
+    assert fresh.overlap() == ov
+    legacy = {k: v for k, v in m.state_dict().items()
+              if not k.startswith("wall/")}
+    old = TrafficMeter()
+    old.load_state_dict(legacy)               # wall keys optional on load
+    assert old.overlap()["parallelism"] == 0.0
+
+
+def test_async_overlap_exceeds_one_with_concurrency(setup):
+    """Two dispatch groups in flight must overlap work inside the span:
+    the parallelism ratio exceeds 1x (the barrier's ceiling is ~1)."""
+    cfg, split, data = setup
+    eng = AsyncRoundEngine(None, None, ClientSampler(N_CLIENTS, 8, seed=3),
+                           wan_sched(),
+                           AsyncConfig(buffer_size=4, concurrency=3,
+                                       group_size=4))
+    eng.init(None)
+    stats = eng.run_flushes(6)
+    assert stats["flushes"] == 6
+    assert eng.meter.overlap()["parallelism"] > 1.0
