@@ -49,6 +49,7 @@ DEFAULT_RESULTS = [
     os.path.join(ROOT, "benchmarks", "results", "kernel_microbench.json"),
     os.path.join(ROOT, "benchmarks", "results", "serve_throughput.json"),
     os.path.join(ROOT, "benchmarks", "results", "decode_throughput.json"),
+    os.path.join(ROOT, "benchmarks", "results", "serve_paged.json"),
     os.path.join(ROOT, "benchmarks", "results", "secure_agg.json"),
     os.path.join(ROOT, "benchmarks", "results", "population_scale.json"),
     os.path.join(ROOT, "benchmarks", "results", "async_rounds.json"),

@@ -28,6 +28,8 @@ SUITES = {
               "serving engine tok/s + latency"),
     "decode": ("benchmarks.decode_throughput",
                "decode fast path: scan stepping + decode attention"),
+    "serve_paged": ("benchmarks.serve_paged",
+                    "paged KV: slots at fixed HBM + prefix reuse"),
     "secure": ("benchmarks.secure_agg",
                "privacy engine: secure-agg overhead + mask kernel"),
     "population": ("benchmarks.population_scale",

@@ -201,6 +201,13 @@ def serve_comm_breakdown(wire, *, d_model: int, soft_prompt_len: int,
     included), making this the exact counterpart of the ServeEngine's
     TrafficMeter; tests/test_serve.py pins measured-vs-analytical <= 5%.
     Serving is forward-only: no gradient crossings, 1x per direction.
+
+    The PAGED engine changes none of this: paging is a memory-layout
+    optimization, so this model covers both engines verbatim
+    (tests/test_serve_paged.py pins paged == dense metered bytes).
+    Count a shared prefix as part of each request's prompt here; prefix
+    HITS then meter measured <= analytical, since the prefix activations
+    cross once per tenant instead of once per request.
     """
     out: Dict[str, float] = {}
     for b in wire.boundaries:

@@ -217,8 +217,125 @@ class SplitModel:
         return jax.jit(self.cache_write_slot,
                        donate_argnums=(0,) if donate else ())
 
+    # ------------------------------------------------- paged allocation
+    # The paged serving cache replaces the dense (slot, window) pair with a
+    # PAGE POOL: every attention-cache leaf becomes (n_cycles, n_pages,
+    # page_size, ...) and a per-slot BLOCK TABLE of physical page ids maps a
+    # slot's logical blocks onto pool pages (serve/paged_engine.py owns the
+    # host-side allocator). A pool is literally `init_cache(n_pages,
+    # page_size)` — batch axis = page axis — so the page axis is uniformly
+    # axis 1 of every leaf, after the stacked-layer axis.
+
+    def paged_cache_unsupported(self) -> Optional[str]:
+        """None when this model can serve from a paged pool; otherwise the
+        reason it cannot. Paging assumes every cached layer is a uniform
+        full-window attention cache (one ring layout shared by all leaves);
+        recurrent state (mamba/rwkv), MLA latents, local-attention windows,
+        encoder outputs and dense prefix stacks keep per-slot state the
+        block tables cannot express yet."""
+        cfg = self.cfg
+        if cfg.arch_type in ("vit", "audio", "vlm"):
+            return f"arch_type {cfg.arch_type!r} has no token decode loop"
+        if any(kind != "attn" for kind in cfg.layer_pattern):
+            return (f"layer pattern {cfg.layer_pattern} has non-'attn' "
+                    f"layers")
+        if cfg.attention is not None and cfg.attention.mla is not None:
+            return "MLA latent caches are not paged yet"
+        if cfg.n_dense_layers:
+            return f"{cfg.n_dense_layers} dense prefix layers are not paged"
+        if cfg.encoder is not None:
+            return "encoder models have no token decode loop"
+        return None
+
+    def init_paged_cache(self, n_pages: int, page_size: int,
+                         dtype=jnp.float32) -> Params:
+        """The device-side page pool: one page axis shared by head, body
+        and tail stacks (a page id is valid in every layer's pool)."""
+        reason = self.paged_cache_unsupported()
+        if reason is not None:
+            raise ValueError(f"{self.cfg.name}: paged cache unsupported — "
+                             f"{reason}")
+        return self.init_cache(n_pages, page_size, dtype)
+
+    @staticmethod
+    def paged_seg_view(seg_cache: Params, tables) -> Params:
+        """Inject the (S, n_blocks) block tables into every stacked layer
+        group of one segment's pool (broadcast over the cycle axis so they
+        ride the layer scan); `apply_attention` detects the key and takes
+        the paged decode path."""
+        stacks = {}
+        for name, stack in seg_cache["stack"].items():
+            n = stack["positions"].shape[0]
+            stacks[name] = dict(stack, block_tables=jnp.broadcast_to(
+                tables[None], (n,) + tables.shape))
+        return {"stack": stacks}
+
+    @staticmethod
+    def strip_paged_view(seg_cache: Params) -> Params:
+        """Drop the injected block tables, leaving the bare pool pytree."""
+        return {"stack": {name: {k: v for k, v in stack.items()
+                                if k != "block_tables"}
+                          for name, stack in seg_cache["stack"].items()}}
+
+    @staticmethod
+    def paged_gather(pool: Params, tables) -> Params:
+        """Gather per-slot dense cache views out of a pool: leaf
+        (n, P, page, ...) + tables (S, nb) -> (n, S, nb*page, ...), laid out
+        exactly like a dense `init_cache(S, nb*page)` slot cache (block j
+        covers width indices [j*page, (j+1)*page))."""
+        S, nb = tables.shape
+
+        def g(leaf):
+            out = leaf[:, tables]                    # (n, S, nb, page, ...)
+            return out.reshape(leaf.shape[0], S, nb * leaf.shape[2],
+                               *leaf.shape[3:])
+        return jax.tree.map(g, pool)
+
+    @staticmethod
+    def paged_scatter_token(pool: Params, dense: Params, tables,
+                            pos) -> Params:
+        """Write back the single token each slot just wrote at width index
+        `pos` (S,) of its dense view (the decode-step inverse of
+        `paged_gather` — everything else in the dense view is unchanged
+        pool content)."""
+        S, nb = tables.shape
+        s_idx = jnp.arange(S)
+
+        def sc(pool_leaf, dense_leaf):
+            page_len = pool_leaf.shape[2]
+            page = tables[s_idx, pos // page_len]    # (S,)
+            off = pos % page_len
+            vals = dense_leaf[:, s_idx, pos]         # (n, S, ...)
+            return pool_leaf.at[:, page, off].set(
+                vals.astype(pool_leaf.dtype))
+        return jax.tree.map(sc, pool, dense)
+
+    @staticmethod
+    def paged_scatter_slot(pool: Params, single: Params, table_row,
+                           write_mask, scratch_page) -> Params:
+        """Scatter one slot's batch=1 dense cache (width nb*page) into its
+        pages. `write_mask` (nb,) bool selects the blocks to land; masked
+        blocks (shared prefix pages, unallocated entries) are redirected to
+        the scratch page so the op stays shape-stable without touching
+        live pages."""
+        nb = table_row.shape[0]
+        dest = jnp.where(write_mask, table_row, scratch_page)
+
+        def sc(pool_leaf, dense_leaf):
+            page_len = pool_leaf.shape[2]
+            r = dense_leaf[:, 0].reshape(dense_leaf.shape[0], nb, page_len,
+                                         *dense_leaf.shape[3:])
+            return pool_leaf.at[:, dest].set(r.astype(pool_leaf.dtype))
+        return jax.tree.map(sc, pool, single)
+
+    @staticmethod
+    def paged_copy_page(pool: Params, src, dst) -> Params:
+        """Copy one physical page across every layer's pool — the COW
+        divergence copy for a shared boundary page."""
+        return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), pool)
+
     # -------------------------------------------------------------- embed
-    def _embed(self, head_p, batch, mode, prompt, dtype):
+    def _embed(self, head_p, batch, mode, prompt, dtype, chunk_start=None):
         cfg = self.cfg
         emb = head_p["embed"]
         if cfg.arch_type == "vit":
@@ -250,7 +367,7 @@ class SplitModel:
             pe = batch["patch_embeds"].astype(dtype)
             x = jnp.concatenate([pe, x], axis=1)
             n_prefix += pe.shape[1]
-        if prompt is not None and mode != "decode":
+        if prompt is not None and mode != "decode" and chunk_start is None:
             pr = jnp.broadcast_to(prompt[None], (B,) + prompt.shape)
             x = jnp.concatenate([pr.astype(dtype), x], axis=1)
             n_prefix += prompt.shape[0]
@@ -258,6 +375,12 @@ class SplitModel:
         T = x.shape[1]
         if mode == "decode":
             base = batch["pos"][:, None]
+        elif chunk_start is not None:
+            # chunked-prefill continuation: this chunk's tokens sit at
+            # positions [chunk_start, chunk_start + T) of an already
+            # partially-filled cache; no soft prompt is prepended (it went
+            # in with the first chunk).
+            base = chunk_start[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
         else:
             base = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
         base = base.astype(jnp.int32)
@@ -295,9 +418,13 @@ class SplitModel:
 
     def head_fwd(self, head_p, prompt, batch, *, mode="train", cache=None,
                  impl="ref", dtype=jnp.float32, remat=False,
-                 unroll=False) -> Dict[str, Any]:
+                 unroll=False, chunk_start=None) -> Dict[str, Any]:
         """Client-side: embed (+prompts, + whisper encoder) -> head layers.
-        Output `smashed` is the cut-layer activation sent to the server."""
+        Output `smashed` is the cut-layer activation sent to the server.
+        `chunk_start` (B,) marks a chunked-prefill continuation: the batch's
+        tokens extend a partially-filled prefill cache starting at those
+        positions (attention then runs write-then-attend over the full
+        cache, like decode, instead of chunk-local causal)."""
         cfg = self.cfg
         encoder_out = None
         new_cache = dict(cache) if cache is not None else None
@@ -320,10 +447,11 @@ class SplitModel:
                     new_cache["encoder_out"] = encoder_out
 
         x, positions, seq_pos, n_prefix = self._embed(
-            head_p, batch, mode, prompt, dtype)
+            head_p, batch, mode, prompt, dtype, chunk_start)
         ctx = L.Ctx(mode=mode, positions=positions, seq_pos=seq_pos,
                     impl=impl, remat=remat, unroll=unroll,
-                    causal=(cfg.arch_type != "vit"), encoder_out=encoder_out)
+                    causal=(cfg.arch_type != "vit"), encoder_out=encoder_out,
+                    has_context=(chunk_start is not None))
         aux = jnp.float32(0.0)
         if cfg.n_dense_layers:
             c = cache.get("dense_stack") if cache is not None else None
@@ -341,7 +469,8 @@ class SplitModel:
         return {"smashed": x, "positions": positions, "seq_pos": seq_pos,
                 "n_prefix": n_prefix, "encoder_out": encoder_out, "aux": aux,
                 "cache": new_cache, "mode": mode, "impl": impl,
-                "remat": remat, "unroll": unroll}
+                "remat": remat, "unroll": unroll,
+                "has_context": chunk_start is not None}
 
     def _ctx_from(self, head_out) -> L.Ctx:
         return L.Ctx(mode=head_out["mode"], positions=head_out["positions"],
@@ -349,7 +478,8 @@ class SplitModel:
                      remat=head_out.get("remat", False),
                      unroll=head_out.get("unroll", False),
                      causal=(self.cfg.arch_type != "vit"),
-                     encoder_out=head_out["encoder_out"])
+                     encoder_out=head_out["encoder_out"],
+                     has_context=head_out.get("has_context", False))
 
     def body_fwd(self, body_p, smashed, head_out, *, cache=None):
         """Server-side: frozen body over the smashed activations."""
@@ -391,17 +521,24 @@ class SplitModel:
     # -------------------------------------------------------------- routes
     def forward(self, params, batch, *, route="split", mode="train",
                 cache=None, impl="ref", dtype=jnp.float32, remat=False,
-                unroll=False, prompt=None, last_only=True, wire_key=None):
+                unroll=False, prompt=None, last_only=True, wire_key=None,
+                chunk_start=None):
         """route='split': head -> body -> tail (phase 2), every smashed
         tensor crossing the head_body / body_tail wire boundaries through
         their codecs; out['wire_bytes'] holds the measured bytes per link.
         route='local': head -> tail directly (phase 1 local-loss update and
-        EL2N scoring — the body is skipped, zero server communication)."""
-        prompt = params["prompt"] if prompt is None else prompt
+        EL2N scoring — the body is skipped, zero server communication).
+        `chunk_start` (B,) runs a chunked-prefill continuation (see
+        `head_fwd`); the soft prompt went in with the first chunk, so none
+        is prepended here."""
+        if chunk_start is not None:
+            prompt = None
+        else:
+            prompt = params["prompt"] if prompt is None else prompt
         hc = cache["head"] if cache is not None else None
         ho = self.head_fwd(params["head"], prompt, batch, mode=mode,
                            cache=hc, impl=impl, dtype=dtype, remat=remat,
-                           unroll=unroll)
+                           unroll=unroll, chunk_start=chunk_start)
         x, aux = ho["smashed"], ho["aux"]
         new_cache = {"head": ho["cache"]} if cache is not None else None
         wire_bytes = {}

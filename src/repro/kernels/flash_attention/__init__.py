@@ -1,2 +1,3 @@
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
 from repro.kernels.flash_attention.decode import decode_attention  # noqa: F401
+from repro.kernels.flash_attention.decode import paged_decode_attention  # noqa: F401

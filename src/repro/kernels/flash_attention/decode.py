@@ -45,15 +45,15 @@ def _on_tpu() -> bool:
 
 
 # ------------------------------------------------------------ pallas kernel
-def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, kvpos_ref, o_ref,
-                   m_scr, l_scr, acc_scr, *, scale: float,
-                   window: Optional[int], softcap: Optional[float],
-                   n_kv_blocks: int):
-    """One (slot, kv_head) pair; kv blocks innermost (sequential), carrying
-    the online-softmax state in VMEM scratch. Block rows are the GQA group's
-    query heads for this kv head — a (group, block_kv) score tile."""
-    ikv = pl.program_id(2)
-
+def _attend_kv_block(ikv, qp, kvp, q_ref, k_ref, v_ref, o_ref,
+                     m_scr, l_scr, acc_scr, *, scale: float,
+                     window: Optional[int], softcap: Optional[float],
+                     n_kv_blocks: int):
+    """Shared online-softmax body for one (slot, kv_head, kv_block) step:
+    a (group, block_kv) score tile folded into VMEM scratch, initialized at
+    the first kv block and normalized out at the last. `qp` is the slot's
+    absolute query position (scalar), `kvp` the block's (1, block_kv)
+    positions (-1 = empty)."""
     @pl.when(ikv == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, MASK_VALUE)
@@ -71,8 +71,6 @@ def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, kvpos_ref, o_ref,
     # per-slot masking: cache slots are valid when they hold a real position
     # (>= 0) at or before the query's absolute position — ragged per-slot
     # lengths and ring-buffer order come in through the data, not the grid
-    qp = qpos_ref[0, 0]                          # scalar int32
-    kvp = kvpos_ref[0]                           # (1, block_kv) int32
     valid = (kvp >= 0) & (kvp <= qp)
     if window is not None:
         valid &= kvp > qp - window
@@ -92,6 +90,35 @@ def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, kvpos_ref, o_ref,
     def _finalize():
         o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[:, :1], 1e-30)
                        ).astype(o_ref.dtype)
+
+
+def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, kvpos_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float,
+                   window: Optional[int], softcap: Optional[float],
+                   n_kv_blocks: int):
+    """One (slot, kv_head) pair; kv blocks innermost (sequential), carrying
+    the online-softmax state in VMEM scratch. Block rows are the GQA group's
+    query heads for this kv head — a (group, block_kv) score tile."""
+    _attend_kv_block(
+        pl.program_id(2), qpos_ref[0, 0], kvpos_ref[0],
+        q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+        scale=scale, window=window, softcap=softcap, n_kv_blocks=n_kv_blocks)
+
+
+def _paged_decode_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, kvpos_ref,
+                         o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                         window: Optional[int], softcap: Optional[float],
+                         n_kv_blocks: int):
+    """Paged variant: the grid's kv-block axis walks the slot's BLOCK TABLE.
+    `bt_ref`/`qpos_ref` are the scalar-prefetch operands — the same block
+    table the in_specs index_maps used to pick this program's K/V page, so
+    the kernel body only needs the slot's query position; the page indirection
+    already happened in the prefetch."""
+    del bt_ref  # consumed by the index_maps
+    _attend_kv_block(
+        pl.program_id(2), qpos_ref[pl.program_id(0)], kvpos_ref[...],
+        q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+        scale=scale, window=window, softcap=softcap, n_kv_blocks=n_kv_blocks)
 
 
 def decode_attention_fwd(
@@ -227,4 +254,123 @@ def decode_attention(
         qg, kt, vt, q_positions.astype(jnp.int32)[:, None],
         kvp.astype(jnp.int32), scale=scale, sliding_window=sliding_window,
         softcap=softcap, block_kv=bkv, interpret=(impl == "interpret"))
+    return out.reshape(B, 1, Hq, Dv)
+
+
+# ----------------------------------------------------------- paged variant
+def paged_decode_attention_fwd(
+    q: jnp.ndarray,             # (B, Hkv, group, Dh) — grouped query heads
+    k_pool: jnp.ndarray,        # (P, Hkv, page, Dh) — the page pool
+    v_pool: jnp.ndarray,        # (P, Hkv, page, Dv)
+    block_tables: jnp.ndarray,  # (B, n_blocks) int32 physical page ids
+    q_positions: jnp.ndarray,   # (B,) int32 — absolute query position
+    kv_positions: jnp.ndarray,  # (P, page) int32 — -1 marks empty slots
+    *,
+    scale: float,
+    sliding_window: Optional[int],
+    softcap: Optional[float],
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """The Pallas paged kernel: the block table and query positions ride in
+    as scalar-prefetch operands, so the in_specs index_maps translate each
+    grid step's logical block to its physical page — the kernel streams
+    exactly the slot's pages out of the pool, never a gathered copy."""
+    B, Hkv, G, Dh = q.shape
+    P, _, page, Dv = v_pool.shape
+    nb = block_tables.shape[1]
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, window=sliding_window,
+        softcap=softcap, n_kv_blocks=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh),
+                         lambda b, h, i, bt, qp: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, Dh),
+                         lambda b, h, i, bt, qp: (bt[b, i], h, 0, 0)),
+            pl.BlockSpec((1, 1, page, Dv),
+                         lambda b, h, i, bt, qp: (bt[b, i], h, 0, 0)),
+            pl.BlockSpec((1, page),
+                         lambda b, h, i, bt, qp: (bt[b, i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dv),
+                               lambda b, h, i, bt, qp: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, LANES), jnp.float32),   # m
+            pltpu.VMEM((G, LANES), jnp.float32),   # l
+            pltpu.VMEM((G, Dv), jnp.float32),      # acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), q.dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="sfprompt_paged_decode_attention",
+    )(block_tables.astype(jnp.int32), q_positions.astype(jnp.int32),
+      q, k_pool, v_pool, kv_positions.astype(jnp.int32))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sliding_window", "softcap", "scale", "impl"))
+def paged_decode_attention(
+    q: jnp.ndarray,              # (B, 1, Hq, Dh) — ONE token per slot
+    k: jnp.ndarray,              # (P, page, Hkv, Dh) — the page POOL
+    v: jnp.ndarray,              # (P, page, Hkv, Dv)
+    *,
+    block_tables: jnp.ndarray,   # (B, n_blocks) int32 physical page ids
+    q_positions: jnp.ndarray,    # (B,) absolute position of the query
+    kv_positions: jnp.ndarray,   # (P, page) absolute positions, -1 = empty
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """`decode_attention` against a PAGE POOL instead of per-slot caches.
+
+    Slot b's KV lives in pool pages `block_tables[b]` (logical block j =
+    width range [j*page, (j+1)*page)). Masking stays wholly data-driven —
+    unallocated blocks point at the null page whose positions are -1, so
+    they mask out exactly like empty ring slots. On the XLA/ref paths the
+    pool is gathered into the dense per-slot layout (bit-identical math to
+    `decode_attention` when n_blocks*page == W); on TPU the Pallas kernel
+    streams pages via scalar-prefetched block tables with no gather.
+    """
+    assert q.shape[1] == 1, f"decode_attention is single-query, got {q.shape}"
+    assert causal, "decode attention is causal by construction"
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl in ("blocked", "analysis"):
+        impl = "xla"
+    B, _, Hq, Dh = q.shape
+    P, page, Hkv, Dv = v.shape
+    nb = block_tables.shape[1]
+    if scale is None:
+        scale = Dh ** -0.5
+    if impl in ("ref", "xla"):
+        kg = k[block_tables].reshape(B, nb * page, Hkv, Dh)
+        vg = v[block_tables].reshape(B, nb * page, Hkv, Dv)
+        kvp = kv_positions[block_tables].reshape(B, nb * page)
+        if impl == "ref":
+            return ref.attention(
+                q, kg, vg, causal=True, q_offset=q_positions,
+                kv_positions=kvp, sliding_window=sliding_window,
+                softcap=softcap, scale=scale)
+        return _xla_decode(q, kg, vg, q_positions, kvp, scale=scale,
+                           sliding_window=sliding_window, softcap=softcap)
+
+    G = Hq // Hkv
+    qg = q[:, 0].reshape(B, Hkv, G, Dh)
+    kt = jnp.moveaxis(k, 2, 1)                   # (P, Hkv, page, Dh)
+    vt = jnp.moveaxis(v, 2, 1)
+    out = paged_decode_attention_fwd(
+        qg, kt, vt, block_tables, q_positions, kv_positions, scale=scale,
+        sliding_window=sliding_window, softcap=softcap,
+        interpret=(impl == "interpret"))
     return out.reshape(B, 1, Hq, Dv)

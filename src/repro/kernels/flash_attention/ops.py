@@ -11,6 +11,9 @@ from 0). Single-query cache reads (Sq=1 with q_offset / explicit
 kv_positions — the decode hot path, including ring-buffer caches) dispatch
 to the dedicated decode-attention kernel in `decode.py`; multi-query calls
 with explicit positions (prefill continuation) stay on the ref oracle.
+Decode against a PAGE POOL (per-slot block tables instead of per-slot
+caches) is `decode.paged_decode_attention`, re-exported here — callers hold
+a pool + block tables, so it never routes through this dense entry point.
 """
 from __future__ import annotations
 
@@ -21,8 +24,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import ref
-from repro.kernels.flash_attention.decode import decode_attention
+from repro.kernels.flash_attention.decode import (decode_attention,
+                                                  paged_decode_attention)
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+__all__ = ["flash_attention", "decode_attention", "paged_decode_attention"]
 
 
 def _on_tpu() -> bool:

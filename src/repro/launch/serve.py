@@ -15,8 +15,19 @@ dispatch (1 = per-token), `--impl` picks the decode-attention kernel
 `--wire {fp32,bf16,int8}` sets the smashed-tensor codec on both
 boundaries. docs/ROUND_LIFECYCLE.md traces one token through the stack.
 
+Paged engine knobs: `--page-size N` (N > 0) swaps in the
+`PagedServeEngine` — page-pool KV with per-slot block tables — with
+`--n-pages` sizing the pool (default: one full window per slot),
+`--shared-prefix K` prepending K deterministic common-prefix tokens to
+every request with copy-on-write page sharing across same-tenant
+requests, and `--prefill-chunk C` streaming prompts in C-token pieces.
+Paging never changes the wire protocol; a prefix HIT honestly meters
+fewer prefill bytes, so measured <= analytical when sharing kicks in.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \\
       --requests 16 --slots 8 --tenants 4 --wire int8
+  PYTHONPATH=src python -m repro.launch.serve --page-size 16 \\
+      --shared-prefix 24 --prefill-chunk 8
 """
 from __future__ import annotations
 
@@ -31,8 +42,9 @@ from repro.core import SplitConfig, SplitModel
 from repro.core.comm import serve_comm_breakdown
 from repro.runtime import WireSpec
 from repro.runtime.meter import MB
-from repro.serve import (ServeConfig, ServeEngine, TenantBank,
-                         WorkloadConfig, synthetic_requests)
+from repro.serve import (PagedServeConfig, PagedServeEngine, ServeConfig,
+                         ServeEngine, TenantBank, WorkloadConfig,
+                         synthetic_requests)
 
 
 def personalized_bank(model: SplitModel, params, n_tenants: int,
@@ -90,6 +102,19 @@ def main(argv=None):
                          "ref = the jnp oracle")
     ap.add_argument("--no-donate", action="store_true",
                     help="disable KV-cache donation into the jitted steps")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="tokens per KV page; > 0 serves with the paged "
+                         "engine, 0 (default) keeps the dense slot cache")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="page-pool size incl. the 2 reserved pages "
+                         "(default: one full window per slot)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many deterministic common-prefix "
+                         "tokens to every request, shared copy-on-write "
+                         "across same-tenant requests (paged engine only)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="stream prompts in pieces of this many tokens "
+                         "(paged engine only; default: monolithic)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--params", default=None,
                     help="checkpoint to serve (e.g. a training run's "
@@ -111,12 +136,30 @@ def main(argv=None):
         params = jax.tree.map(jnp.asarray, loaded)
 
     bank = personalized_bank(model, params, args.tenants)
-    engine = ServeEngine(model, params, bank,
-                         ServeConfig(n_slots=args.slots,
-                                     max_seq=args.max_seq,
-                                     decode_block=args.decode_block,
-                                     donate=not args.no_donate,
-                                     impl=args.impl))
+    if args.page_size > 0:
+        # deterministic synthetic shared prefix (a pure function of its
+        # length), standing in for a common system prompt
+        prefix = tuple(int(1 + (i * 13) % (cfg.vocab_size - 1))
+                       for i in range(args.shared_prefix))
+        engine = PagedServeEngine(
+            model, params, bank,
+            PagedServeConfig(n_slots=args.slots, max_seq=args.max_seq,
+                             decode_block=args.decode_block,
+                             donate=not args.no_donate, impl=args.impl,
+                             page_size=args.page_size,
+                             n_pages=args.n_pages,
+                             shared_prefix=prefix or None,
+                             prefill_chunk=args.prefill_chunk))
+    else:
+        if args.shared_prefix or args.prefill_chunk:
+            raise SystemExit("--shared-prefix/--prefill-chunk need the "
+                             "paged engine: pass --page-size N")
+        engine = ServeEngine(model, params, bank,
+                             ServeConfig(n_slots=args.slots,
+                                         max_seq=args.max_seq,
+                                         decode_block=args.decode_block,
+                                         donate=not args.no_donate,
+                                         impl=args.impl))
     reqs = synthetic_requests(WorkloadConfig(
         n_requests=args.requests,
         mean_interarrival=args.mean_interarrival,
@@ -138,15 +181,27 @@ def main(argv=None):
     measured = stats["wire_bytes"]
     # compare against what was actually SERVED — admission control may
     # have rejected part of the trace, and rejected requests never cross
-    # the wire
+    # the wire. A shared prefix counts toward every served request's
+    # prompt here; prefix HITS skip re-transmitting those activations, so
+    # the measured total dips below analytical as the hit ratio climbs.
+    prefix_n = args.shared_prefix if args.page_size > 0 else 0
     analytical = serve_comm_breakdown(
         wire, d_model=cfg.d_model, soft_prompt_len=split.prompt_len,
-        requests=[(len(f.req.tokens), f.req.max_new)
+        requests=[(len(f.req.tokens) + prefix_n, f.req.max_new)
                   for f in stats["finished"]])
     print(f"wire [{wire.describe()}]: {measured['total'] / MB:.3f} MB "
           f"measured ({measured['head_body'] / MB:.3f} head_body + "
           f"{measured['body_tail'] / MB:.3f} body_tail) vs "
           f"{sum(analytical.values()) / MB:.3f} MB analytical")
+    if args.page_size > 0:
+        print(f"pages: {stats['n_pages']} x {stats['page_size']} tok | "
+              f"peak {stats['peak_pages']} | "
+              f"in use {stats['pages_in_use']} | "
+              f"COW copies {stats['page_copies']} | "
+              f"prefix hits {stats['prefix_hits']}/"
+              f"{stats['prefix_hits'] + stats['prefix_misses']} "
+              f"(ratio {stats['prefix_hit_ratio']:.2f}) | "
+              f"prefill chunks {stats['prefill_chunks']}")
     return stats
 
 

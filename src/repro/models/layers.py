@@ -13,7 +13,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.decode import decode_attention
+from repro.kernels.flash_attention.decode import (decode_attention,
+                                                  paged_decode_attention)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.mamba2_scan.ops import mamba2_scan
 from repro.kernels.rwkv6_scan.ops import rwkv6_scan
@@ -114,6 +115,11 @@ class Ctx:
     remat: bool = False
     unroll: bool = False                        # unroll layer scans (dry-run
     #                                             analysis: exact HLO costs)
+    has_context: bool = False                   # prefill continuation: the
+    #                                             cache already holds earlier
+    #                                             chunks, attend over it
+    #                                             (write-then-attend) instead
+    #                                             of chunk-local causal
 
     @property
     def decoding(self) -> bool:
@@ -186,6 +192,25 @@ def _cache_write(cache: Params, names: Tuple[str, ...], values, pos: jnp.ndarray
     return out
 
 
+def _paged_cache_write(cache: Params, names: Tuple[str, ...], values,
+                       pos: jnp.ndarray):
+    """One decode token into a paged pool: slot b's token at absolute
+    position `pos[b]` lands at offset pos % page_size of physical page
+    block_tables[b, pos // page_size]. Idle slots' tables point every block
+    at the scratch page, so their (discarded) writes never touch a live
+    page; duplicate scratch writes are fine because scratch is never read."""
+    bt = cache["block_tables"]                           # (S, n_blocks)
+    page_len = cache["positions"].shape[1]
+    b_idx = jnp.arange(pos.shape[0])
+    page = bt[b_idx, pos // page_len]                    # (B,)
+    off = pos % page_len
+    out = dict(cache)
+    for name, val in zip(names, values):
+        out[name] = cache[name].at[page, off].set(val[:, 0])
+    out["positions"] = cache["positions"].at[page, off].set(pos)
+    return out
+
+
 def _gqa_attend(q, k, v, ctx: Ctx, att: AttentionConfig, *, window, softcap,
                 kv_positions=None, q_offset=None, causal=True, scale=None):
     return flash_attention(
@@ -221,13 +246,39 @@ def apply_attention(p: Params, cfg: ModelConfig, x: jnp.ndarray, ctx: Ctx,
 
     new_cache = cache
     if ctx.mode == "decode":
-        # decode fast path: single-query cache-read kernel, never the full
-        # flash machinery (see kernels/flash_attention/decode.py)
-        new_cache = _cache_write(cache, ("k", "v"), (k, v), sp[:, 0])
-        out = decode_attention(
-            q, new_cache["k"], new_cache["v"], q_positions=sp[:, 0],
-            kv_positions=new_cache["positions"], sliding_window=window,
-            softcap=att.attn_logit_softcap, impl=ctx.impl)
+        if cache is not None and "block_tables" in cache:
+            # paged decode: write through the block table, then attend the
+            # slot's pages (gather on XLA, scalar-prefetch on TPU Pallas)
+            new_cache = _paged_cache_write(cache, ("k", "v"), (k, v),
+                                           sp[:, 0])
+            out = paged_decode_attention(
+                q, new_cache["k"], new_cache["v"],
+                block_tables=cache["block_tables"], q_positions=sp[:, 0],
+                kv_positions=new_cache["positions"], sliding_window=window,
+                softcap=att.attn_logit_softcap, impl=ctx.impl)
+        else:
+            # decode fast path: single-query cache-read kernel, never the
+            # full flash machinery (see kernels/flash_attention/decode.py)
+            new_cache = _cache_write(cache, ("k", "v"), (k, v), sp[:, 0])
+            out = decode_attention(
+                q, new_cache["k"], new_cache["v"], q_positions=sp[:, 0],
+                kv_positions=new_cache["positions"], sliding_window=window,
+                softcap=att.attn_logit_softcap, impl=ctx.impl)
+    elif ctx.has_context and cache is not None:
+        # chunked-prefill continuation: land this chunk's K/V in the cache
+        # first, then attend over everything cached so far (earlier chunks
+        # + this one) with absolute query positions
+        w = cache["positions"].shape[1]
+        slot = sp % w
+        b_idx = jnp.arange(B)[:, None]
+        new_cache = dict(cache)
+        new_cache["k"] = cache["k"].at[b_idx, slot].set(k)
+        new_cache["v"] = cache["v"].at[b_idx, slot].set(v)
+        new_cache["positions"] = cache["positions"].at[b_idx, slot].set(sp)
+        out = _gqa_attend(q, new_cache["k"], new_cache["v"], ctx, att,
+                          window=window, softcap=att.attn_logit_softcap,
+                          kv_positions=new_cache["positions"],
+                          q_offset=sp[:, 0])
     else:
         out = _gqa_attend(q, k, v, ctx, att, window=window,
                           softcap=att.attn_logit_softcap, causal=ctx.causal)
@@ -253,6 +304,9 @@ def _apply_mla(p: Params, cfg: ModelConfig, x, h, ctx: Ctx, cache, window):
     long decode caches cheap."""
     att = cfg.attention
     m = att.mla
+    if cache is not None and "block_tables" in cache:
+        raise NotImplementedError(
+            "paged KV cache does not support MLA latent caches")
     B, S, D = x.shape
     pos2d = _pos2d(ctx)
     sp = _seq_pos(ctx)

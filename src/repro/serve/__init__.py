@@ -1,17 +1,27 @@
 """Multi-tenant continuous-batching split-serving engine.
 
 See ARCHITECTURE.md §Serving engine and `launch/serve.py` for the CLI.
+Dense slot cache: `ServeEngine`; paged pool with copy-on-write shared
+prefixes and chunked prefill: `PagedServeEngine` (serve/paged_engine.py).
 """
 from repro.serve.bank import TenantBank
 from repro.serve.engine import Finished, ServeConfig, ServeEngine
+from repro.serve.paged_engine import PagedServeConfig, PagedServeEngine
+from repro.serve.paging import PagePool, PagePoolExhausted, PrefixEntry
 from repro.serve.steps import (make_batched_decode_step,
+                               make_chunk_continue_step,
                                make_multi_decode_step,
+                               make_paged_decode_step,
+                               make_paged_multi_decode_step,
                                make_tenant_prefill_step)
 from repro.serve.workload import Request, WorkloadConfig, synthetic_requests
 
 __all__ = [
     "TenantBank", "ServeConfig", "ServeEngine", "Finished",
+    "PagedServeConfig", "PagedServeEngine",
+    "PagePool", "PagePoolExhausted", "PrefixEntry",
     "make_batched_decode_step", "make_multi_decode_step",
-    "make_tenant_prefill_step",
+    "make_tenant_prefill_step", "make_paged_decode_step",
+    "make_paged_multi_decode_step", "make_chunk_continue_step",
     "Request", "WorkloadConfig", "synthetic_requests",
 ]

@@ -173,8 +173,10 @@ class ServeEngine:
         self._wire_acc = self._zero_wire()
 
     # ------------------------------------------------------------- intake
-    def submit(self, req: Request) -> bool:
-        """Admission control: False (rejected) once the queue is full."""
+    def _window_check(self, req: Request) -> None:
+        """Reject requests that cannot fit a slot's KV window. Subclasses
+        with coarser-grained capacity (the paged engine rounds up to whole
+        pages) override this."""
         total = len(req.tokens) + self.model.split.prompt_len + req.max_new
         if total > self.cfg.max_seq:
             raise ValueError(
@@ -182,6 +184,10 @@ class ServeEngine:
                 f"prompt({self.model.split.prompt_len}) + "
                 f"new({req.max_new}) = {total} exceeds the slot window "
                 f"{self.cfg.max_seq}")
+
+    def submit(self, req: Request) -> bool:
+        """Admission control: False (rejected) once the queue is full."""
+        self._window_check(req)
         if req.tenant >= self.bank.n_tenants:
             raise ValueError(f"request {req.rid}: unknown tenant "
                              f"{req.tenant} (bank has {self.bank.n_tenants})")
@@ -228,7 +234,7 @@ class ServeEngine:
         if self.collect_logits:
             st.logits.append(np.asarray(logits[0]))
         if req.max_new <= 1:
-            self._free.append(slot)
+            self._release_slot(slot)
             return self._finish(st)
         self._slots[slot] = st
         self._tokens[slot] = int(tok[0])
@@ -261,6 +267,48 @@ class ServeEngine:
             self._multi[n_steps] = fn
         return fn
 
+    def _can_admit(self, req: Request) -> bool:
+        """Head-of-line admission gate beyond free slots (the paged engine
+        waits here when the page pool cannot cover the request)."""
+        return True
+
+    def _admit_from_queue(self, done: List[Finished]) -> None:
+        """Admit up to `prefills_per_step` queued requests into free slots
+        (head-of-line order; `_can_admit` can stall the queue without
+        dropping it)."""
+        admitted = 0
+        while (self._queue and self._free
+               and admitted < self.cfg.prefills_per_step):
+            if not self._can_admit(self._queue[0]):
+                break
+            fin = self._admit_one(self._queue.pop(0))
+            admitted += 1
+            if fin is not None:
+                done.append(fin)
+
+    def _dispatch_decode(self, remaining: np.ndarray, n_eff: int):
+        """Run one decode dispatch (single-token or scanned multi-token)
+        over the engine's cache state; returns ((n_eff, S) tokens,
+        (n_eff, S, V) logits or None, wire bytes). Subclasses swap the
+        cache representation here."""
+        if n_eff <= 1:
+            toks, logits, self.cache, wb = self._decode(
+                self.shared, self.bank.tails,
+                jnp.asarray(self._tenants), jnp.asarray(self._tokens),
+                jnp.asarray(self._pos),
+                jnp.asarray(remaining > 0, jnp.float32), self.cache)
+            return toks[None], logits[None], wb         # (1, S[, V])
+        toks, logits, self.cache, wb = self._get_multi(n_eff)(
+            self.shared, self.bank.tails,
+            jnp.asarray(self._tenants), jnp.asarray(self._tokens),
+            jnp.asarray(self._pos), jnp.asarray(remaining), self.cache)
+        return toks, logits, wb
+
+    def _release_slot(self, slot: int) -> None:
+        """Return a retired slot to the free list (the paged engine also
+        releases the slot's pages and scrubs its block table)."""
+        self._free.append(slot)
+
     def step(self) -> List[Finished]:
         """One engine step: admit up to `prefills_per_step` queued requests
         into free slots, then one batched decode over every occupied slot —
@@ -268,13 +316,7 @@ class ServeEngine:
         in one scanned dispatch, with retirement deferred to scan exit.
         Returns the requests that completed during this step."""
         done: List[Finished] = []
-        admitted = 0
-        while (self._queue and self._free
-               and admitted < self.cfg.prefills_per_step):
-            fin = self._admit_one(self._queue.pop(0))
-            admitted += 1
-            if fin is not None:
-                done.append(fin)
+        self._admit_from_queue(done)
 
         remaining = np.array(
             [0 if s is None else s.req.max_new - len(s.tokens)
@@ -283,18 +325,7 @@ class ServeEngine:
             self.step_idx += 1
             return done
         n_eff = self._decode_bucket(int(remaining.max()))
-        if n_eff <= 1:
-            toks, logits, self.cache, wb = self._decode(
-                self.shared, self.bank.tails,
-                jnp.asarray(self._tenants), jnp.asarray(self._tokens),
-                jnp.asarray(self._pos),
-                jnp.asarray(remaining > 0, jnp.float32), self.cache)
-            toks, logits = toks[None], logits[None]     # (1, S[, V])
-        else:
-            toks, logits, self.cache, wb = self._get_multi(n_eff)(
-                self.shared, self.bank.tails,
-                jnp.asarray(self._tenants), jnp.asarray(self._tokens),
-                jnp.asarray(self._pos), jnp.asarray(remaining), self.cache)
+        toks, logits, wb = self._dispatch_decode(remaining, n_eff)
         self._absorb_wire(wb)
         self.decode_steps += n_eff
         for t in range(n_eff):
@@ -317,7 +348,7 @@ class ServeEngine:
             if len(st.tokens) >= st.req.max_new:
                 done.append(self._finish(st))
                 self._slots[slot] = None
-                self._free.append(slot)
+                self._release_slot(slot)
         self.step_idx += n_eff
         return done
 

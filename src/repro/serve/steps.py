@@ -140,3 +140,123 @@ def make_multi_decode_step(model: SplitModel, n_steps: int, *,
         toks, logits = ys if with_logits else (ys, None)
         return toks, logits, cache, wb
     return multi_decode_step
+
+
+# ------------------------------------------------------------- paged steps
+def make_paged_decode_step(model: SplitModel, *, impl: str = "ref",
+                           dtype=jnp.float32):
+    """paged_decode_step(shared, bank_tails, tenant_ids, tokens, pos,
+    active, pool, tables) -> (next_tok (S,), logits (S, V), pool,
+    wire_bytes).
+
+    The paged twin of `make_batched_decode_step`: the shared KV cache is a
+    PAGE POOL and `tables` (S, n_blocks) maps each slot's logical blocks to
+    physical pages. Head and body attend through the block tables directly
+    (`paged_decode_attention` — gather on XLA, scalar-prefetch on TPU); the
+    tail's per-tenant vmap cannot scatter into one shared pool from inside
+    vmap, so its pool is gathered to the dense per-slot view pre-vmap and
+    only the single written token is scattered back after. Retired slots'
+    table rows point every block at the scratch page, so their (discarded)
+    writes never touch a live page. Wire accounting is IDENTICAL to the
+    dense step — paging is memory-only.
+    """
+    wire = model.wire
+
+    def tail_one(tail_p, x_row, pos_row, stack_row):
+        head_out = {"mode": "decode", "positions": pos_row[None, None],
+                    "seq_pos": pos_row[None, None], "impl": impl,
+                    "remat": False, "unroll": False,
+                    "encoder_out": None, "n_prefix": 0}
+        cache1 = {"stack": jax.tree.map(lambda c: c[:, None], stack_row)}
+        to = model.tail_fwd(tail_p, x_row[None], head_out, cache=cache1)
+        new_stack = jax.tree.map(lambda c: c[:, 0], to["cache"]["stack"])
+        return to["logits"][0, 0].astype(jnp.float32), new_stack
+
+    tail_slots = jax.vmap(tail_one, in_axes=(0, 0, 0, 1), out_axes=(0, 1))
+
+    def paged_decode_step(shared, bank_tails, tenant_ids, tokens, pos,
+                          active, pool, tables):
+        batch = {"tokens": tokens[:, None], "pos": pos}
+        head_cache = model.paged_seg_view(pool["head"], tables)
+        ho = model.head_fwd(shared["head"], None, batch, mode="decode",
+                            cache=head_cache, impl=impl, dtype=dtype)
+        n_active = jnp.sum(active.astype(jnp.float32))
+        x, b_hb = wire.head_body.transmit(ho["smashed"], train=False,
+                                          rows=n_active)
+        body_cache = model.paged_seg_view(pool["body"], tables)
+        bo = model.body_fwd(shared["body"], x, ho, cache=body_cache)
+        x, b_bt = wire.body_tail.transmit(bo["smashed"], train=False,
+                                          rows=n_active)
+        tails = jax.tree.map(lambda t: jnp.take(t, tenant_ids, axis=0),
+                             bank_tails)
+        tail_dense = model.paged_gather(pool["tail"], tables)
+        logits, new_tail_stack = tail_slots(tails, x, pos,
+                                            tail_dense["stack"])
+        next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        new_pool = {
+            "head": model.strip_paged_view(ho["cache"]),
+            "body": model.strip_paged_view(bo["cache"]),
+            "tail": model.paged_scatter_token(
+                pool["tail"], {"stack": new_tail_stack}, tables, pos),
+        }
+        return next_tok, logits, new_pool, {"head_body": b_hb,
+                                            "body_tail": b_bt}
+    return paged_decode_step
+
+
+def make_paged_multi_decode_step(model: SplitModel, n_steps: int, *,
+                                 impl: str = "ref", dtype=jnp.float32,
+                                 with_logits: bool = True):
+    """`make_multi_decode_step` over the page pool: n_steps greedy tokens
+    per slot in one lax.scan of the paged per-token body (the block tables
+    are loop constants — pages are preallocated for a request's whole
+    lifetime at admission, so no table ever changes mid-dispatch)."""
+    decode_step = make_paged_decode_step(model, impl=impl, dtype=dtype)
+
+    def paged_multi_decode_step(shared, bank_tails, tenant_ids, tokens, pos,
+                                remaining, pool, tables):
+        def body(carry, t):
+            tokens, pos, pool, acc = carry
+            active = (remaining > t).astype(jnp.float32)
+            tok, logits, pool, wb = decode_step(
+                shared, bank_tails, tenant_ids, tokens, pos, active, pool,
+                tables)
+            acc = {k: acc[k] + wb[k] for k in acc}
+            ys = (tok, logits) if with_logits else tok
+            # a slot that retires mid-scan keeps computing but its position
+            # FREEZES: advancing past the request total would walk the
+            # write pointer off the slot's allocated pages into NULL table
+            # entries (the dense ring just wraps; pages cannot)
+            return (tok, pos + (remaining > t + 1), pool, acc), ys
+
+        zero = {name: jnp.float32(0.0) for name in BOUNDARY_NAMES}
+        (_, _, pool, wb), ys = jax.lax.scan(
+            body, (tokens, pos, pool, zero),
+            jnp.arange(n_steps, dtype=jnp.int32))
+        toks, logits = ys if with_logits else (ys, None)
+        return toks, logits, pool, wb
+    return paged_multi_decode_step
+
+
+def make_chunk_continue_step(model: SplitModel, *, impl: str = "ref",
+                             dtype=jnp.float32):
+    """chunk_step(shared, tail, batch, cache, chunk_start) ->
+    (next_tok (1,), last_logits (1, V), cache, wire_bytes).
+
+    A chunked-prefill CONTINUATION: `batch["tokens"]` (1, T) extends a
+    partially-filled batch=1 prefill cache starting at absolute position
+    `chunk_start` (1,). The soft prompt went in with the first chunk
+    (`make_tenant_prefill_step`), so none is prepended; attention runs
+    write-then-attend over the full cache. Wire bytes are the chunk's
+    smashed tensors — summed over chunks they equal the monolithic
+    prefill's bytes exactly (the smashed footprint is linear in tokens)."""
+    def chunk_step(shared, tail, batch, cache, chunk_start):
+        params = {"head": shared["head"], "body": shared["body"],
+                  "tail": tail}
+        out = model.forward(params, batch, route="split", mode="prefill",
+                            cache=cache, impl=impl, dtype=dtype,
+                            chunk_start=chunk_start)
+        logits = out["logits"][:, -1, :].astype(jnp.float32)
+        next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return next_tok, logits, out["cache"], out["wire_bytes"]
+    return chunk_step

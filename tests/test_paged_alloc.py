@@ -1,0 +1,160 @@
+"""Page-allocator invariants (serve/paging.py).
+
+Deterministic tests always run; the randomized property suite additionally
+runs wherever hypothesis is installed (CI installs requirements-dev.txt).
+Invariants under test:
+
+  * alloc/free roundtrip in reverse order restores the free-list EXACTLY;
+  * no page is ever owned by two slots — refcount > 1 happens only through
+    `share` (shared-prefix pages);
+  * a page's refcount hits zero iff the page returns to the pool;
+  * exhaustion raises `PagePoolExhausted` loudly (and `alloc_many` is
+    all-or-nothing) instead of aliasing a live page;
+  * the reserved NULL/SCRATCH pages are never handed out and never freed.
+"""
+import pytest
+
+from repro.serve.paging import PagePool, PagePoolExhausted
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+SETTINGS = dict(max_examples=50, deadline=None)
+
+
+# -------------------------------------------------------- deterministic
+def test_reserved_pages_never_allocated():
+    pool = PagePool(8, 4)
+    got = [pool.alloc() for _ in range(pool.n_free)]
+    assert PagePool.NULL_PAGE not in got
+    assert PagePool.SCRATCH_PAGE not in got
+    assert sorted(got) == list(range(PagePool.N_RESERVED, 8))
+
+
+def test_alloc_free_roundtrip_restores_free_list():
+    pool = PagePool(10, 4)
+    before = pool.free_list()
+    pages = [pool.alloc() for _ in range(5)]
+    for pid in reversed(pages):
+        assert pool.free(pid)          # refcount 1 -> released
+    assert pool.free_list() == before
+
+
+def test_exhaustion_raises_not_aliases():
+    pool = PagePool(5, 4)
+    got = {pool.alloc() for _ in range(3)}
+    assert len(got) == 3               # 3 distinct live pages
+    with pytest.raises(PagePoolExhausted):
+        pool.alloc()
+    assert pool.n_used == 3            # failed alloc changed nothing
+
+
+def test_alloc_many_is_all_or_nothing():
+    pool = PagePool(6, 4)
+    pool.alloc()
+    free_before = pool.free_list()
+    with pytest.raises(PagePoolExhausted):
+        pool.alloc_many(4)             # only 3 free
+    assert pool.free_list() == free_before
+    pages = pool.alloc_many(3)
+    assert len(set(pages)) == 3
+    assert pool.n_free == 0
+
+
+def test_share_and_release_cascade():
+    pool = PagePool(6, 4)
+    pid = pool.alloc()
+    pool.share(pid)
+    pool.share(pid)
+    assert pool.refcount(pid) == 3
+    assert not pool.free(pid)          # two owners left
+    assert not pool.free(pid)
+    assert pool.refcount(pid) == 1
+    assert pool.free(pid)              # last owner -> back to the pool
+    assert pid in pool.free_list()
+    assert pool.refcount(pid) == 0
+
+
+def test_misuse_raises():
+    pool = PagePool(6, 4)
+    with pytest.raises(ValueError):
+        pool.free(PagePool.NULL_PAGE)
+    with pytest.raises(ValueError):
+        pool.free(PagePool.SCRATCH_PAGE)
+    with pytest.raises(ValueError):
+        pool.share(4)                  # unallocated
+    pid = pool.alloc()
+    pool.free(pid)
+    with pytest.raises(ValueError):
+        pool.free(pid)                 # double free
+    with pytest.raises(ValueError):
+        PagePool(2, 4)                 # nothing beyond the reserved pages
+    with pytest.raises(ValueError):
+        PagePool(8, 0)
+
+
+# ----------------------------------------------------------- properties
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def op_sequences(draw):
+        """Interleaved alloc/share/free traces against a small pool."""
+        n_pages = draw(st.integers(4, 24))
+        ops = draw(st.lists(
+            st.tuples(st.sampled_from(["alloc", "share", "free"]),
+                      st.integers(0, 2 ** 30)),
+            min_size=1, max_size=80))
+        return n_pages, ops
+
+    @given(op_sequences())
+    @settings(**SETTINGS)
+    def test_ownership_model(seq):
+        """Replay a random trace against a reference ownership model: no
+        page is handed out while live, refcount > 1 only via share, and
+        refcount-zero <=> page is in the free list."""
+        n_pages, ops = seq
+        pool = PagePool(n_pages, 4)
+        owners = {}                       # pid -> reference count
+        for kind, pick in ops:
+            live = sorted(owners)
+            if kind == "alloc":
+                try:
+                    pid = pool.alloc()
+                except PagePoolExhausted:
+                    assert len(owners) == n_pages - PagePool.N_RESERVED
+                    continue
+                assert pid not in owners, "aliased a live page"
+                assert pid >= PagePool.N_RESERVED
+                owners[pid] = 1
+            elif kind == "share" and live:
+                pid = live[pick % len(live)]
+                pool.share(pid)
+                owners[pid] += 1
+            elif kind == "free" and live:
+                pid = live[pick % len(live)]
+                released = pool.free(pid)
+                owners[pid] -= 1
+                assert released == (owners[pid] == 0)
+                if owners[pid] == 0:
+                    del owners[pid]
+            # global invariants after every op
+            for pid, rc in owners.items():
+                assert pool.refcount(pid) == rc
+            free = set(pool.free_list())
+            assert free.isdisjoint(owners)
+            assert len(free) + len(owners) == n_pages - PagePool.N_RESERVED
+
+    @given(st.integers(4, 32), st.integers(1, 16))
+    @settings(**SETTINGS)
+    def test_lifo_roundtrip_exact(n_pages, n_take):
+        """Allocating k pages and freeing them in reverse order restores
+        the free list EXACTLY (LIFO), for any k up to the pool size."""
+        pool = PagePool(n_pages, 8)
+        k = min(n_take, pool.n_free)
+        before = pool.free_list()
+        pages = [pool.alloc() for _ in range(k)]
+        for pid in reversed(pages):
+            assert pool.free(pid)
+        assert pool.free_list() == before

@@ -1,0 +1,335 @@
+"""Paged-KV serving engine: differential harness against the dense engine.
+
+The paged engine must be an invisible MEMORY optimization: with a
+dense-equivalent pool (page_size | max_seq, default n_pages) its greedy
+tokens, per-step logits, AND metered wire bytes are bit-identical to
+`ServeEngine` at fp32 across ragged joins/leaves. On top of that it must
+deliver the paging wins the dense engine cannot: page-granular admission
+(last-page slack), chunked prefill, and copy-on-write shared prefixes
+whose lifecycle (prefilled once per tenant, one boundary copy per join,
+pages cascade back when the last sharer drains) is pinned by counters.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import SplitConfig, SplitModel
+from repro.kernels.flash_attention import (decode_attention,
+                                           paged_decode_attention)
+from repro.runtime import WireSpec
+from repro.serve import (PagedServeConfig, PagedServeEngine, Request,
+                         ServeConfig, ServeEngine, TenantBank)
+
+KEY = jax.random.PRNGKey(0)
+MAX_SEQ = 48
+PROMPT_LEN = 4
+PAGE = 8                       # divides MAX_SEQ -> capacity == max_seq
+
+
+def build_model(wire="fp32"):
+    cfg = get_config("qwen2.5-14b").reduced(
+        n_layers=3, d_model=64, d_ff=128, vocab_size=128)
+    split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=PROMPT_LEN)
+    return cfg, SplitModel(cfg, split, WireSpec.make(wire))
+
+
+def make_bank(model, params, n_tenants=3, jitter=0.2):
+    tails, prompts = [], []
+    for t in range(n_tenants):
+        key = jax.random.fold_in(jax.random.PRNGKey(7), t)
+        leaves, treedef = jax.tree.flatten(params["tail"])
+        ks = jax.random.split(key, len(leaves) + 1)
+        tails.append(jax.tree.unflatten(treedef, [
+            x + jitter * jax.random.normal(k, x.shape, x.dtype)
+            for x, k in zip(leaves, ks[:-1])]))
+        prompts.append(params["prompt"] + jitter * jax.random.normal(
+            ks[-1], params["prompt"].shape))
+    return TenantBank.from_lists(tails, prompts)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg, model = build_model()
+    params = model.init(KEY)
+    bank = make_bank(model, params)
+    return cfg, model, params, bank
+
+
+def _toks(L, mult):
+    return (np.arange(L, dtype=np.int32) * mult) % 128
+
+
+# ragged joins/leaves: staggered arrivals, mixed lengths, a tenant repeat
+REQS = [
+    Request(rid=0, tenant=0, tokens=_toks(9, 1), max_new=5, arrival=0),
+    Request(rid=1, tenant=1, tokens=_toks(14, 3), max_new=4, arrival=0),
+    Request(rid=2, tenant=2, tokens=_toks(6, 7), max_new=6, arrival=2),
+    Request(rid=3, tenant=1, tokens=_toks(11, 5), max_new=3, arrival=3),
+]
+
+
+def run_dense(model, params, bank, reqs, *, max_seq=MAX_SEQ, **kw):
+    eng = ServeEngine(model, params, bank,
+                      ServeConfig(n_slots=3, max_seq=max_seq,
+                                  decode_block=2),
+                      collect_logits=True)
+    return eng, eng.run(reqs, **kw)
+
+
+def run_paged(model, params, bank, reqs, *, max_seq=MAX_SEQ, **cfg_kw):
+    eng = PagedServeEngine(
+        model, params, bank,
+        PagedServeConfig(n_slots=3, max_seq=max_seq, decode_block=2,
+                         page_size=PAGE, **cfg_kw),
+        collect_logits=True)
+    return eng, eng.run(reqs)
+
+
+# ------------------------------------------------------------ differential
+def test_paged_matches_dense_bitwise(setup):
+    """THE tentpole invariant: with a dense-equivalent pool the paged
+    engine is bit-identical to the dense engine — greedy tokens, every
+    per-step logit row, and every metered wire byte (fp32)."""
+    cfg, model, params, bank = setup
+    _, dense = run_dense(model, params, bank, REQS)
+    peng, paged = run_paged(model, params, bank, REQS)
+    assert paged["n_finished"] == dense["n_finished"] == len(REQS)
+    d = {f.req.rid: f for f in dense["finished"]}
+    p = {f.req.rid: f for f in paged["finished"]}
+    for rid in d:
+        np.testing.assert_array_equal(p[rid].tokens, d[rid].tokens,
+                                      err_msg=f"rid={rid}")
+        np.testing.assert_array_equal(p[rid].logits, d[rid].logits,
+                                      err_msg=f"rid={rid}")
+    # paging is memory-only: the serve wire protocol is untouched
+    assert paged["wire_bytes"] == dense["wire_bytes"]
+    # and the pool fully drains
+    assert paged["pages_in_use"] == 0
+    assert peng.pool_alloc.n_free == peng.pool_alloc.n_pages - 2
+
+
+def test_paged_kernel_matches_dense_gather():
+    """Op-level differential: `paged_decode_attention` over a shuffled
+    page pool equals `decode_attention` over the gathered dense caches —
+    bit-exact on ref/xla, allclose under Pallas interpret."""
+    B, nb, Hq, Hkv, Dh = 3, 3, 4, 2, 32
+    P = 2 + B * nb + 3          # reserved + live + spare pages
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, Dh))
+    k_pool = jax.random.normal(ks[1], (P, PAGE, Hkv, Dh))
+    v_pool = jax.random.normal(ks[2], (P, PAGE, Hkv, Dh))
+    # shuffled non-contiguous page assignment, ragged lengths
+    perm = np.random.default_rng(11).permutation(np.arange(2, P))
+    tables = jnp.asarray(perm[:B * nb].reshape(B, nb), jnp.int32)
+    lens = np.asarray([20, 7, 24])
+    kv_pos = np.full((P, PAGE), -1, np.int32)
+    for b in range(B):
+        for j in range(nb):
+            base = j * PAGE
+            n = int(np.clip(lens[b] - base, 0, PAGE))
+            kv_pos[perm[b * nb + j], :n] = base + np.arange(n)
+    kv_pos = jnp.asarray(kv_pos)
+    q_pos = jnp.asarray(lens - 1, jnp.int32)
+
+    kd = k_pool[tables].reshape(B, nb * PAGE, Hkv, Dh)
+    vd = v_pool[tables].reshape(B, nb * PAGE, Hkv, Dh)
+    kvd = kv_pos[tables].reshape(B, nb * PAGE)
+    for impl in ("ref", "xla"):
+        want = decode_attention(q, kd, vd, q_positions=q_pos,
+                                kv_positions=kvd, impl=impl)
+        got = paged_decode_attention(q, k_pool, v_pool,
+                                     block_tables=tables, q_positions=q_pos,
+                                     kv_positions=kv_pos, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=impl)
+    want = decode_attention(q, kd, vd, q_positions=q_pos,
+                            kv_positions=kvd, impl="ref")
+    got = paged_decode_attention(q, k_pool, v_pool, block_tables=tables,
+                                 q_positions=q_pos, kv_positions=kv_pos,
+                                 impl="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("prefix", [None, (3, 1, 4, 1, 5, 9, 2, 6)])
+def test_tenant_isolation_under_join(setup, prefix):
+    """Tenant A's outputs don't change when tenant B joins mid-flight —
+    with and without prefix sharing enabled."""
+    cfg, model, params, bank = setup
+    a = Request(rid=0, tenant=0, tokens=_toks(8, 1), max_new=6, arrival=0)
+    b = Request(rid=1, tenant=2, tokens=_toks(12, 11), max_new=4, arrival=2)
+
+    def run(reqs):
+        _, stats = run_paged(model, params, bank, reqs,
+                             shared_prefix=prefix)
+        return {f.req.rid: f for f in stats["finished"]}
+
+    alone, joined = run([a])[0], run([a, b])[0]
+    np.testing.assert_array_equal(alone.tokens, joined.tokens)
+    np.testing.assert_array_equal(alone.logits, joined.logits)
+
+
+def test_chunked_prefill_matches_monolithic(setup):
+    """Streaming prompts in 5-token chunks changes neither the tokens nor
+    the metered bytes (chunking reshapes dispatches, not traffic); logits
+    agree to float tolerance."""
+    cfg, model, params, bank = setup
+    mono_eng, mono = run_paged(model, params, bank, REQS)
+    chunk_eng, chunk = run_paged(model, params, bank, REQS,
+                                 prefill_chunk=5)
+    assert chunk_eng.prefill_chunks > 0
+    m = {f.req.rid: f for f in mono["finished"]}
+    c = {f.req.rid: f for f in chunk["finished"]}
+    for rid in m:
+        np.testing.assert_array_equal(c[rid].tokens, m[rid].tokens,
+                                      err_msg=f"rid={rid}")
+        np.testing.assert_allclose(c[rid].logits, m[rid].logits,
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"rid={rid}")
+    assert chunk["wire_bytes"] == mono["wire_bytes"]
+    assert chunk["pages_in_use"] == 0
+
+
+PREFIX = (3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5)        # 11 tokens: L_pre = 15
+#                                                   -> 1 full page + boundary
+
+
+def test_shared_prefix_matches_dense_prepended(setup):
+    """Prefix sharing is semantics-preserving: a paged engine with
+    `shared_prefix=F` serves the same tokens as a dense engine fed
+    `F + tokens`, while metering FEWER OR EQUAL prefill bytes (a prefix
+    hit skips re-transmitting the prefix activations)."""
+    cfg, model, params, bank = setup
+    # overlapping same-tenant pair so the second join is a prefix HIT
+    reqs = [
+        Request(rid=0, tenant=1, tokens=_toks(9, 3), max_new=6, arrival=0),
+        Request(rid=1, tenant=0, tokens=_toks(7, 1), max_new=5, arrival=0),
+        Request(rid=2, tenant=1, tokens=_toks(5, 5), max_new=6, arrival=1),
+    ]
+    prepended = [
+        Request(rid=r.rid, tenant=r.tenant,
+                tokens=np.concatenate([np.asarray(PREFIX, np.int32),
+                                       r.tokens]),
+                max_new=r.max_new, arrival=r.arrival)
+        for r in reqs]
+    _, dense = run_dense(model, params, bank, prepended,
+                         max_seq=MAX_SEQ + len(PREFIX) + PAGE)
+    peng, paged = run_paged(model, params, bank, reqs,
+                            max_seq=MAX_SEQ, shared_prefix=PREFIX)
+    assert peng.prefix_hits >= 1
+    d = {f.req.rid: f for f in dense["finished"]}
+    p = {f.req.rid: f for f in paged["finished"]}
+    for rid in d:
+        np.testing.assert_array_equal(p[rid].tokens, d[rid].tokens,
+                                      err_msg=f"rid={rid}")
+        np.testing.assert_allclose(p[rid].logits, d[rid].logits,
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"rid={rid}")
+    for name in ("head_body", "body_tail", "total"):
+        assert paged["wire_bytes"][name] < dense["wire_bytes"][name]
+
+
+def test_cow_lifecycle_counters(setup):
+    """The COW ledger: the prefix is prefilled ONCE per tenant (every other
+    prefill dispatch is a continuation chunk), each join copies exactly one
+    boundary page, and draining the last sharer returns every page."""
+    cfg, model, params, bank = setup
+    reqs = [
+        Request(rid=0, tenant=1, tokens=_toks(9, 3), max_new=6, arrival=0),
+        Request(rid=1, tenant=1, tokens=_toks(5, 5), max_new=6, arrival=1),
+    ]
+    peng, stats = run_paged(model, params, bank, reqs,
+                            shared_prefix=PREFIX)
+    assert stats["n_finished"] == 2
+    # prefix computed once: the only full-prefill dispatch built the entry
+    assert peng.prefill_step_calls == 1
+    assert (peng.prefix_misses, peng.prefix_hits) == (1, 1)
+    assert stats["prefix_hit_ratio"] == 0.5
+    # one boundary-page copy per join (L_pre=15 has a partial page)
+    assert peng.page_copies == 2
+    # last sharer drained -> entry evicted, every page back in the pool
+    assert not peng._prefix
+    assert stats["pages_in_use"] == 0
+    assert peng.pool_alloc.n_free == peng.pool_alloc.n_pages - 2
+
+
+def test_warm_replay_after_reset(setup):
+    """reset_stats() clears the paged counters too; a warm engine replays
+    the trace with identical schedule, tokens, and ledger."""
+    cfg, model, params, bank = setup
+    eng = PagedServeEngine(
+        model, params, bank,
+        PagedServeConfig(n_slots=3, max_seq=MAX_SEQ, decode_block=2,
+                         page_size=PAGE, shared_prefix=PREFIX,
+                         prefill_chunk=4),
+        collect_logits=True)
+
+    def snap(stats):
+        return (eng.decode_steps, eng.tokens_out, eng.prefill_count,
+                eng.prefill_step_calls, eng.prefill_chunks,
+                eng.page_copies, eng.prefix_hits, eng.prefix_misses,
+                eng.peak_pages, stats["wire_bytes"]["total"],
+                {f.req.rid: f.tokens.tolist() for f in stats["finished"]})
+
+    first = snap(eng.run(REQS))
+    eng.reset_stats()
+    assert eng.peak_pages == 0 and eng.page_copies == 0
+    second = snap(eng.run(REQS))
+    assert first == second
+    assert eng.pool_alloc.n_used == 0
+
+
+# --------------------------------------------------------------- admission
+def test_page_granular_admission(setup):
+    """A request a few tokens over `max_seq` but inside the last page's
+    slack is REJECTED by the dense window and ADMITTED by the paged engine
+    (capacity rounds up to whole pages)."""
+    cfg, model, params, bank = setup
+    ps = 10                                   # 48 -> 5 pages, capacity 50
+    over = Request(rid=0, tenant=0, tokens=_toks(40, 1),
+                   max_new=5, arrival=0)      # total = 40 + 4 + 5 = 49
+    dense = ServeEngine(model, params, bank,
+                        ServeConfig(n_slots=2, max_seq=MAX_SEQ))
+    with pytest.raises(ValueError):
+        dense.submit(over)
+    peng = PagedServeEngine(
+        model, params, bank,
+        PagedServeConfig(n_slots=2, max_seq=MAX_SEQ, page_size=ps))
+    stats = peng.run([over])
+    assert stats["n_finished"] == 1
+    assert stats["finished"][0].tokens.shape == (5,)
+    # but a request beyond even the page-rounded capacity still fails loud
+    with pytest.raises(ValueError):
+        peng.submit(Request(rid=1, tenant=0, tokens=_toks(46, 1),
+                            max_new=5, arrival=0))
+
+
+def test_pool_exhaustion_head_of_line_wait(setup):
+    """With pages for only one request in flight, the queue's head WAITS
+    for the pool instead of being dropped — both requests finish."""
+    cfg, model, params, bank = setup
+    nb = -(-MAX_SEQ // PAGE)
+    reqs = [Request(rid=i, tenant=i % 3, tokens=_toks(10 + i, 3),
+                    max_new=4, arrival=0) for i in range(3)]
+    peng = PagedServeEngine(
+        model, params, bank,
+        PagedServeConfig(n_slots=3, max_seq=MAX_SEQ, page_size=PAGE,
+                         n_pages=nb + 2 + 1))   # one window + reserved + 1
+    stats = peng.run(reqs)
+    assert stats["n_finished"] == 3
+    assert peng.peak_pages <= peng.pool_alloc.n_pages - 2
+    assert stats["pages_in_use"] == 0
+
+
+def test_paged_engine_rejects_unsupported_arch():
+    cfg = get_config("vit-base").reduced(n_layers=3, d_model=64, d_ff=128)
+    model = SplitModel(cfg, SplitConfig(head_cycles=1, tail_cycles=1,
+                                        prompt_len=4))
+    params = model.init(KEY)
+    bank = TenantBank.replicate(params["tail"], params["prompt"], 2)
+    with pytest.raises(ValueError):
+        PagedServeEngine(model, params, bank,
+                         PagedServeConfig(n_slots=2, max_seq=32,
+                                          page_size=8))
