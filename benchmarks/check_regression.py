@@ -53,6 +53,7 @@ DEFAULT_RESULTS = [
     os.path.join(ROOT, "benchmarks", "results", "secure_agg.json"),
     os.path.join(ROOT, "benchmarks", "results", "population_scale.json"),
     os.path.join(ROOT, "benchmarks", "results", "async_rounds.json"),
+    os.path.join(ROOT, "benchmarks", "results", "mesh_tp.json"),
 ]
 
 

@@ -34,6 +34,8 @@ SUITES = {
                "privacy engine: secure-agg overhead + mask kernel"),
     "population": ("benchmarks.population_scale",
                    "mega-cohort rounds: clients/sec + bytes/round"),
+    "mesh_tp": ("benchmarks.mesh_tp",
+                "tensor-parallel body: per-device HBM ratio + round time"),
     "async": ("benchmarks.async_rounds",
               "buffered-async vs sync barrier round throughput"),
     "accuracy": ("benchmarks.accuracy", "Table 3 / Fig 4"),

@@ -16,6 +16,7 @@ on a mesh that axis shards over ('pod','data') — see launch/dryrun.py.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
@@ -30,7 +31,8 @@ from repro.core.split import SplitModel
 from repro.optim import Optimizer, adamw, apply_updates, sgd
 from repro.privacy.dp import DP_SEED, PrivacyAccountant
 from repro.runtime.meter import EDGE, SECURE, TrafficMeter
-from repro.sharding.rules import cohort_pspecs, params_pspecs
+from repro.sharding.rules import (cohort_pspecs, format_sharding_fallbacks,
+                                  params_pspecs, pop_sharding_fallbacks)
 
 Params = Dict[str, Any]
 
@@ -111,11 +113,23 @@ class SFPromptTrainer:
     def _frozen_arg(self, tree, k: int):
         """(operand, in_axes) for a frozen pytree entering the cohort vmap:
         unbatched with in_axes=None by default (HBM then scales with
-        K * trainable, not K * model), K-broadcast only when a vmap rule
-        demands batched operands (MoE ragged ops)."""
-        if self._batch_frozen:
-            return broadcast_to_clients(tree, k), 0
-        return tree, None
+        K * trainable, not K * model). MoE narrows the batched fallback to
+        the ragged-dot EXPERT leaves only — jax.lax.ragged_dot has no vmap
+        rule for an unbatched rhs, but attention/norm/router leaves vmap
+        fine unbatched, so they stay in_axes=None and keep the no-K-copies
+        HBM win outside the expert stacks."""
+        if not self._batch_frozen:
+            return tree, None
+
+        def is_expert(path):
+            return any(getattr(p, "key", None) == "experts" for p in path)
+
+        operand = jax.tree_util.tree_map_with_path(
+            lambda p, x: jnp.broadcast_to(x[None], (k,) + x.shape)
+            if is_expert(p) else x, tree)
+        axes = jax.tree_util.tree_map_with_path(
+            lambda p, x: 0 if is_expert(p) else None, tree)
+        return operand, axes
 
     def _sharding_tree(self, pspec_tree):
         return jax.tree.map(
@@ -147,6 +161,13 @@ class SFPromptTrainer:
                 {"tail": params["tail"], "prompt": params["prompt"]})
             extras_sh = {"trainable": self._sharding_tree(
                 cohort_pspecs(proto, mesh))}
+        # surface any divisibility fallbacks the spec builders recorded —
+        # a rule that wanted 'model'/'data' but could not divide it means
+        # this mesh silently replicates something it was sized to shard
+        fallbacks = pop_sharding_fallbacks()
+        if fallbacks:
+            warnings.warn(format_sharding_fallbacks(fallbacks),
+                          stacklevel=2)
         donate = (0, 1, 3) if self._donate_cohort else ()
         return jax.jit(
             self._round,

@@ -36,7 +36,8 @@ from repro.core.split import SplitConfig, SplitModel
 from repro.launch import hlo as hlo_util
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
-                               data_parallel_size, make_production_mesh)
+                               data_parallel_size, make_production_mesh,
+                               report_sharding_fallbacks)
 from repro.launch.specs import (SHAPES, ShapeSpec, batch_specs, cache_specs,
                                 param_specs, stack_client_axis)
 from repro.sharding.rules import batch_pspec, cache_pspecs, params_pspecs
@@ -125,6 +126,7 @@ def _build_lowered(model: SplitModel, shape: ShapeSpec, mesh, *,
                                                client_axis=True)),
             _sharding_tree(mesh, batch_pspec(batch, mesh)),
         )
+        report_sharding_fallbacks(f"{cfg.name}/{shape.name}")
         fn = jax.jit(train_step, in_shardings=shardings,
                      donate_argnums=(1, 2))
         return fn.lower(frozen, trainable, opt_state, batch)
@@ -141,6 +143,7 @@ def _build_lowered(model: SplitModel, shape: ShapeSpec, mesh, *,
         _sharding_tree(mesh, batch_pspec(batch, mesh)),
         _sharding_tree(mesh, cache_pspecs(cache, mesh)),
     )
+    report_sharding_fallbacks(f"{cfg.name}/{shape.name}")
     fn = jax.jit(step, in_shardings=shardings, donate_argnums=(2,))
     return fn.lower(params, batch, cache)
 

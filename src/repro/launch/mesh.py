@@ -11,7 +11,12 @@ this module never touches jax device state.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
+
+from repro.sharding.rules import (format_sharding_fallbacks,
+                                  pop_sharding_fallbacks)
 
 # v5e hardware constants for the roofline (per chip)
 PEAK_FLOPS_BF16 = 197e12       # FLOP/s
@@ -25,12 +30,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(n: int = 0):
-    """1-D ('data',) mesh over this host's visible devices — the off-TPU
-    stand-in for the production client plane. With
+def make_host_mesh(n: int = 0, *, model: int = 1):
+    """Host-device mesh — the off-TPU stand-in for the production mesh.
+    model=1 (default): 1-D ('data',) client plane, as before. model>1:
+    2-D ('data', 'model') — the client plane shrinks to n // model and the
+    'model' axis becomes a real tensor-parallel compute axis (the frozen
+    body's params_pspecs 'model' shardings stop being no-ops). With
     XLA_FLAGS=--xla_force_host_platform_device_count=8 (set BEFORE jax
     initializes; see launch/dryrun.py) a CPU host exposes 8 virtual
-    devices, so sharded-cohort lowering is testable without silicon.
+    devices, so e.g. make_host_mesh(model=4) gives (data=2, model=4).
     n=0 uses every visible device."""
     devices = jax.devices()
     n = len(devices) if n <= 0 else n
@@ -40,7 +48,28 @@ def make_host_mesh(n: int = 0):
             "device(s) are visible — set "
             "XLA_FLAGS=--xla_force_host_platform_device_count before jax "
             "initializes")
-    return jax.make_mesh((n,), ("data",), devices=devices[:n])
+    if model <= 1:
+        return jax.make_mesh((n,), ("data",), devices=devices[:n])
+    if n % model != 0:
+        raise ValueError(
+            f"model={model} does not divide the {n}-device host mesh — "
+            "pick a model-axis size that divides the device count")
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         devices=devices[:n])
+
+
+def report_sharding_fallbacks(context: str = "") -> tuple:
+    """Drain the divisibility fallbacks recorded while building partition
+    specs (sharding.rules.guard_divisibility) and warn ONCE if any rule
+    quietly fell back to replication — a mis-sized mesh should be visible,
+    not silently slow. Returns the drained (path, axis, shape) tuples so
+    launchers can also log them."""
+    entries = pop_sharding_fallbacks()
+    if entries:
+        prefix = f"[{context}] " if context else ""
+        warnings.warn(prefix + format_sharding_fallbacks(entries),
+                      stacklevel=2)
+    return entries
 
 
 def data_parallel_size(mesh) -> int:

@@ -115,6 +115,11 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="stream prompts in pieces of this many tokens "
                          "(paged engine only; default: monolithic)")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="serve tensor-parallel over a (data, model) host "
+                         "mesh with a 'model' axis of this size (frozen "
+                         "body sharded, KV kv-heads sharded; must divide "
+                         "the visible device count; 1 = single-device)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--params", default=None,
                     help="checkpoint to serve (e.g. a training run's "
@@ -136,6 +141,10 @@ def main(argv=None):
         params = jax.tree.map(jnp.asarray, loaded)
 
     bank = personalized_bank(model, params, args.tenants)
+    mesh = None
+    if args.mesh_model > 1:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model=args.mesh_model)
     if args.page_size > 0:
         # deterministic synthetic shared prefix (a pure function of its
         # length), standing in for a common system prompt
@@ -149,7 +158,8 @@ def main(argv=None):
                              page_size=args.page_size,
                              n_pages=args.n_pages,
                              shared_prefix=prefix or None,
-                             prefill_chunk=args.prefill_chunk))
+                             prefill_chunk=args.prefill_chunk),
+            mesh=mesh)
     else:
         if args.shared_prefix or args.prefill_chunk:
             raise SystemExit("--shared-prefix/--prefill-chunk need the "
@@ -159,7 +169,8 @@ def main(argv=None):
                                          max_seq=args.max_seq,
                                          decode_block=args.decode_block,
                                          donate=not args.no_donate,
-                                         impl=args.impl))
+                                         impl=args.impl),
+                             mesh=mesh)
     reqs = synthetic_requests(WorkloadConfig(
         n_requests=args.requests,
         mean_interarrival=args.mean_interarrival,

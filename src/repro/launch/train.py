@@ -20,7 +20,9 @@ Two runtimes (docs/ROUND_LIFECYCLE.md walks both end-to-end):
 
 Scale-out and privacy knobs (sfprompt methods only):
   * `--mesh-devices M` shards the cohort round over a host mesh
-    (`--fsdp` additionally shards large frozen params over the mesh);
+    (`--fsdp` additionally shards large frozen params over the mesh;
+    `--mesh-model T` makes it a 2D (data, model) mesh with the frozen
+    body computing tensor-parallel over the T-way 'model' axis);
   * `--edges E` aggregates hierarchically (client -> edge -> global);
   * `--secure-agg` masks uploads (Bonawitz-style, uint32 ring);
   * `--dp-epsilon/--dp-delta/--dp-clip` run DP-SGD on client deltas
@@ -91,12 +93,15 @@ def build_data(args, cfg):
 def build_mesh(args):
     """Host mesh for sharded-cohort dispatch (--mesh-devices). The K axis
     then shards over the mesh's client plane; 0 keeps single-device vmap.
+    --mesh-model M > 1 folds the mesh to 2D (data, model): the frozen body
+    runs TENSOR-PARALLEL over 'model' while K shards over 'data'.
     On CPU, XLA_FLAGS=--xla_force_host_platform_device_count=N must be in
     the environment BEFORE jax initializes for N virtual devices."""
     if not args.mesh_devices:
         return None
     from repro.launch.mesh import make_host_mesh
-    return make_host_mesh(0 if args.mesh_devices < 0 else args.mesh_devices)
+    return make_host_mesh(0 if args.mesh_devices < 0 else args.mesh_devices,
+                          model=max(1, getattr(args, "mesh_model", 1)))
 
 
 def build_trainer(args, model, mesh=None):
@@ -238,6 +243,12 @@ def main():
                          "many devices (-1 = all visible; 0 = single-"
                          "device vmap). On CPU export XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N first")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="tensor-parallel size of the mesh's 'model' axis "
+                         "(must divide --mesh-devices): the frozen body "
+                         "COMPUTES sharded — attention head-parallel, MLP "
+                         "d_ff-parallel — per-device body HBM ~1/M "
+                         "(1 = data-only mesh)")
     ap.add_argument("--fsdp", action="store_true",
                     help="FSDP-shard large frozen params over the mesh's "
                          "data axis instead of replicating them")
@@ -293,6 +304,9 @@ def main():
         ap.error("--mesh-devices/--edges/--fsdp need an sfprompt method — "
                  "only the SFPrompt trainer dispatches sharded cohorts "
                  "and hierarchical aggregation")
+    if args.mesh_model > 1 and not args.mesh_devices:
+        ap.error("--mesh-model needs --mesh-devices: the 'model' axis is "
+                 "carved out of the host mesh")
     if args.edges > 0 and args.k % args.edges != 0:
         ap.error(f"--k {args.k} must divide evenly into --edges "
                  f"{args.edges} contiguous blocks")

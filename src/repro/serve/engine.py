@@ -40,9 +40,10 @@ from repro.runtime.boundary import BOUNDARY_NAMES
 from repro.runtime.meter import TrafficMeter
 from repro.serve.bank import TenantBank
 from repro.serve.steps import (make_batched_decode_step,
-                               make_multi_decode_step,
+                               make_multi_decode_step, make_step_shardings,
                                make_tenant_prefill_step)
 from repro.serve.workload import Request
+from repro.sharding import format_sharding_fallbacks, pop_sharding_fallbacks
 
 _DONATION_WARNING_FILTERED = False
 
@@ -97,7 +98,8 @@ class Finished:
 
 class ServeEngine:
     def __init__(self, model: SplitModel, shared_params, bank: TenantBank,
-                 cfg: ServeConfig, *, collect_logits: bool = False):
+                 cfg: ServeConfig, *, collect_logits: bool = False,
+                 mesh=None):
         if model.cfg.arch_type in ("vit", "audio", "vlm") \
                 or model.cfg.encoder is not None:
             raise ValueError(
@@ -131,12 +133,44 @@ class ServeEngine:
         donate = (6,) if cfg.donate else ()
         if cfg.donate:
             _quiet_cpu_donation_warning()
+        # mesh: run the steps TENSOR-PARALLEL on a (data, model) mesh —
+        # frozen head/body sharded over 'model' (head-parallel attention,
+        # d_ff-parallel MLP), KV slots over 'data', kv-heads over 'model';
+        # per-device body+cache HBM drops ~1/|model| while decode math
+        # stays bit-comparable (tests pin logits dense-vs-TP)
+        self._mesh = mesh
+        self._step_sh = None
+        pf_kw: Dict[str, Any] = {}
+        self._dec_kw: Dict[str, Any] = {}
+        ws_kw: Dict[str, Any] = {}
+        if mesh is not None:
+            sh = make_step_shardings(mesh, self.shared, cache=self.cache,
+                                     blank=self._blank)
+            self._report_fallbacks()
+            self._step_sh = sh
+            r = sh["repl"]
+            self.shared = jax.device_put(self.shared, sh["shared"])
+            self.cache = jax.device_put(self.cache, sh["cache"])
+            self._blank = jax.device_put(self._blank, sh["blank"])
+            pf_kw = dict(
+                in_shardings=(sh["shared"], r, r, r, sh["blank"]),
+                out_shardings=(r, r, sh["blank"], r))
+            self._dec_kw = dict(
+                in_shardings=(sh["shared"], r, r, r, r, r, sh["cache"]),
+                out_shardings=(r, r, sh["cache"], r))
+            ws_kw = dict(in_shardings=(sh["cache"], sh["blank"], r),
+                         out_shardings=sh["cache"])
         self._prefill = jax.jit(make_tenant_prefill_step(
-            model, impl=cfg.impl, dtype=cfg.dtype))
+            model, impl=cfg.impl, dtype=cfg.dtype), **pf_kw)
         self._decode = jax.jit(make_batched_decode_step(
-            model, impl=cfg.impl, dtype=cfg.dtype), donate_argnums=donate)
+            model, impl=cfg.impl, dtype=cfg.dtype), donate_argnums=donate,
+            **self._dec_kw)
         self._multi: Dict[int, Any] = {}    # decode_block bucket -> jit
-        self._write_slot = model.jit_slot_writer(donate=cfg.donate)
+        self._write_slot = (
+            model.jit_slot_writer(donate=cfg.donate) if mesh is None
+            else jax.jit(model.cache_write_slot,
+                         donate_argnums=(0,) if cfg.donate else (),
+                         **ws_kw))
 
         # measured wire bytes accumulate ON DEVICE (traced scalars chained
         # with jnp.add, never synced per token) and fold into the host-side
@@ -151,6 +185,15 @@ class ServeEngine:
         self.rejected = 0
         self.tokens_out = 0
         self._occupancy_sum = 0.0
+
+    @staticmethod
+    def _report_fallbacks() -> None:
+        """Surface any divisibility fallbacks the spec builders recorded —
+        a kv-head count that does not divide 'model' means this mesh is
+        silently replicating what it was sized to shard."""
+        fb = pop_sharding_fallbacks()
+        if fb:
+            warnings.warn(format_sharding_fallbacks(fb), stacklevel=3)
 
     # -------------------------------------------------------------- wire
     @staticmethod
@@ -263,7 +306,7 @@ class ServeEngine:
             fn = jax.jit(make_multi_decode_step(
                 self.model, n_steps, impl=self.cfg.impl,
                 dtype=self.cfg.dtype, with_logits=self.collect_logits),
-                donate_argnums=donate)
+                donate_argnums=donate, **self._dec_kw)
             self._multi[n_steps] = fn
         return fn
 

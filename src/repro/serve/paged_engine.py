@@ -54,7 +54,8 @@ from repro.serve.engine import Finished, ServeConfig, ServeEngine, _SlotState
 from repro.serve.paging import PagePool, PrefixEntry
 from repro.serve.steps import (make_chunk_continue_step,
                                make_paged_decode_step,
-                               make_paged_multi_decode_step)
+                               make_paged_multi_decode_step,
+                               make_step_shardings)
 from repro.serve.workload import Request
 
 import time
@@ -80,7 +81,8 @@ class PagedServeConfig(ServeConfig):
 
 class PagedServeEngine(ServeEngine):
     def __init__(self, model: SplitModel, shared_params, bank: TenantBank,
-                 cfg: PagedServeConfig, *, collect_logits: bool = False):
+                 cfg: PagedServeConfig, *, collect_logits: bool = False,
+                 mesh=None):
         reason = model.paged_cache_unsupported()
         if reason is not None:
             raise ValueError(f"{model.cfg.name}: paged serving unsupported "
@@ -91,7 +93,7 @@ class PagedServeEngine(ServeEngine):
             raise ValueError(f"prefill_chunk must be >= 1, "
                              f"got {cfg.prefill_chunk}")
         super().__init__(model, shared_params, bank, cfg,
-                         collect_logits=collect_logits)
+                         collect_logits=collect_logits, mesh=mesh)
         ps = cfg.page_size
         self.nb_max = -(-cfg.max_seq // ps)         # blocks per slot table
         self.capacity = self.nb_max * ps            # page-rounded window
@@ -113,16 +115,45 @@ class PagedServeEngine(ServeEngine):
 
         donate = (6,) if cfg.donate else ()
         donate0 = (0,) if cfg.donate else ()
+        # mesh: the page pool shards kv-heads over 'model' (pages stay
+        # replicated over the client plane — any table can reference any
+        # page), so paged decode attention runs head-parallel against the
+        # same 'model'-sharded frozen body as the dense steps
+        self._pdec_kw: Dict[str, Any] = {}
+        cont_kw: Dict[str, Any] = {}
+        gather_kw: Dict[str, Any] = {}
+        scatter_kw: Dict[str, Any] = {}
+        copy_kw: Dict[str, Any] = {}
+        if mesh is not None:
+            sh = make_step_shardings(mesh, self.shared, blank=self._blank,
+                                     pool=self.pool)
+            self._report_fallbacks()
+            r = sh["repl"]
+            self.pool = jax.device_put(self.pool, sh["pool"])
+            self._blank = jax.device_put(self._blank, sh["blank"])
+            self._pdec_kw = dict(
+                in_shardings=(sh["shared"], r, r, r, r, r, sh["pool"], r),
+                out_shardings=(r, r, sh["pool"], r))
+            cont_kw = dict(
+                in_shardings=(sh["shared"], r, r, sh["blank"], r),
+                out_shardings=(r, r, sh["blank"], r))
+            gather_kw = dict(in_shardings=(sh["pool"], r, r),
+                             out_shardings=sh["blank"])
+            scatter_kw = dict(in_shardings=(sh["pool"], sh["blank"], r, r),
+                              out_shardings=sh["pool"])
+            copy_kw = dict(in_shardings=(sh["pool"], r, r),
+                           out_shardings=sh["pool"])
         self._paged_decode = jax.jit(make_paged_decode_step(
-            model, impl=cfg.impl, dtype=cfg.dtype), donate_argnums=donate)
+            model, impl=cfg.impl, dtype=cfg.dtype), donate_argnums=donate,
+            **self._pdec_kw)
         self._paged_multi: Dict[int, Any] = {}
         self._continue = jax.jit(make_chunk_continue_step(
-            model, impl=cfg.impl, dtype=cfg.dtype))
-        self._gather_slot = jax.jit(self._gather_slot_impl)
+            model, impl=cfg.impl, dtype=cfg.dtype), **cont_kw)
+        self._gather_slot = jax.jit(self._gather_slot_impl, **gather_kw)
         self._scatter_slot = jax.jit(self._scatter_slot_impl,
-                                     donate_argnums=donate0)
+                                     donate_argnums=donate0, **scatter_kw)
         self._copy_page = jax.jit(self._copy_page_impl,
-                                  donate_argnums=donate0)
+                                  donate_argnums=donate0, **copy_kw)
 
         # paged accounting
         self.page_copies = 0        # COW boundary-page copies
@@ -381,7 +412,7 @@ class PagedServeEngine(ServeEngine):
             fn = jax.jit(make_paged_multi_decode_step(
                 self.model, n_steps, impl=self.cfg.impl,
                 dtype=self.cfg.dtype, with_logits=self.collect_logits),
-                donate_argnums=donate)
+                donate_argnums=donate, **self._pdec_kw)
             self._paged_multi[n_steps] = fn
         return fn
 

@@ -29,9 +29,37 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core.split import SplitModel
 from repro.runtime.boundary import BOUNDARY_NAMES
+from repro.sharding import cache_pspecs, params_pspecs
+
+
+def make_step_shardings(mesh, shared, *, cache=None, blank=None, pool=None):
+    """NamedSharding trees for jitting the serve steps TENSOR-PARALLEL on a
+    (data, model) mesh. The frozen head/body take their params_pspecs
+    'model' shardings (attention head-parallel, MLP d_ff-parallel, vocab-
+    parallel embeddings/LM head), so decode/prefill matmuls run split over
+    'model' with XLA's all-reduces stitching the partial sums. KV caches
+    shard the slot dim over the client plane and the kv-heads dim over
+    'model' via cache_pspecs — page pools with paged=True keep the page
+    axis replicated (any block table may reference any page). `blank` is
+    the batch=1 scratch cache (its singleton slot dim replicates). `repl`
+    is the catch-all replicated sharding, usable as a pytree PREFIX for
+    per-slot vectors, tenant banks, token batches and wire-byte dicts."""
+    def named(pspecs):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                            is_leaf=lambda x: isinstance(x, PartitionSpec))
+    out = {"repl": NamedSharding(mesh, PartitionSpec()),
+           "shared": named(params_pspecs(shared, mesh))}
+    if cache is not None:
+        out["cache"] = named(cache_pspecs(cache, mesh))
+    if blank is not None:
+        out["blank"] = named(cache_pspecs(blank, mesh))
+    if pool is not None:
+        out["pool"] = named(cache_pspecs(pool, mesh, paged=True))
+    return out
 
 
 def make_tenant_prefill_step(model: SplitModel, *, impl: str = "ref",

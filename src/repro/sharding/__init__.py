@@ -1,3 +1,3 @@
 from repro.sharding.rules import (  # noqa: F401
     batch_pspec, cache_pspecs, cohort_pspecs, params_pspecs,
-    guard_divisibility)
+    guard_divisibility, format_sharding_fallbacks, pop_sharding_fallbacks)

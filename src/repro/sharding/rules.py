@@ -52,12 +52,45 @@ def _rule_for(path: str) -> Tuple:
     return ()
 
 
+# Divisibility fallbacks recorded by guard_divisibility: a rule WANTED to
+# shard a dim over a mesh axis that exists, but the dim does not divide the
+# axis size, so the leaf silently replicated on that axis. Quietly slow on
+# a mis-sized mesh — launchers drain this via pop_sharding_fallbacks() and
+# report once (launch/mesh.report_sharding_fallbacks).
+_SHARDING_FALLBACKS: list = []
+
+
+def pop_sharding_fallbacks() -> Tuple[Tuple[str, Any, Tuple[int, ...]], ...]:
+    """Drain the recorded (path, dropped_axis, shape) divisibility
+    fallbacks accumulated by guard_divisibility since the last drain.
+    Deduplicated, insertion-ordered. Mesh-absent axis drops (e.g. 'model'
+    rules on a data-only host mesh) are intentional and never recorded."""
+    seen, out = set(), []
+    for entry in _SHARDING_FALLBACKS:
+        if entry not in seen:
+            seen.add(entry)
+            out.append(entry)
+    _SHARDING_FALLBACKS.clear()
+    return tuple(out)
+
+
+def format_sharding_fallbacks(entries) -> str:
+    """One human-readable line per fallback, for warnings/logs."""
+    lines = [f"  {path or '<unnamed>'}: shape {shape} does not divide "
+             f"mesh axis {axis!r} — replicated on it instead"
+             for path, axis, shape in entries]
+    return ("sharding rules fell back to replication on "
+            f"{len(entries)} leaf dim(s):\n" + "\n".join(lines))
+
+
 def guard_divisibility(spec: Tuple, shape: Tuple[int, ...],
-                       mesh: Mesh) -> P:
+                       mesh: Mesh, *, path: str = None) -> P:
     """Drop axis assignments whose dim is not divisible by the axis size.
     Axes the mesh does not have at all (e.g. 'model' rules on a data-only
     host mesh) are dropped the same way — the rule tables stay mesh-shape
-    agnostic and lowering is correct-by-construction."""
+    agnostic and lowering is correct-by-construction. Divisibility drops
+    (axis present, dim indivisible) are recorded when `path` is given so
+    launchers can surface them (pop_sharding_fallbacks)."""
     out = []
     for dim, axis in zip(shape, spec):
         if axis is None:
@@ -71,7 +104,14 @@ def guard_divisibility(spec: Tuple, shape: Tuple[int, ...],
             continue
         axis = axes if len(axes) > 1 else axes[0]
         size = int(np.prod([mesh.shape[a] for a in axes]))
-        out.append(axis if dim % size == 0 and dim > 0 else None)
+        if dim % size == 0 and dim > 0:
+            out.append(axis)
+        else:
+            # dim <= 1 carries nothing to shard — replication is free,
+            # not a fallback worth surfacing
+            if path is not None and dim > 1:
+                _SHARDING_FALLBACKS.append((path, axis, tuple(shape)))
+            out.append(None)
     return P(*out)
 
 
@@ -113,7 +153,8 @@ def params_pspecs(params_shape: Any, mesh: Mesh, *,
             n_lead = len(shape) - len(spec) - lead
         full = ((data_axes,) if client_axis else ()) + \
             (None,) * n_lead + spec
-        guarded = list(guard_divisibility(full, shape, mesh))
+        guarded = list(guard_divisibility(full, shape, mesh,
+                                          path=_path_str(path)))
         guarded += [None] * (len(shape) - len(guarded))
 
         if (fsdp and not client_axis and "data" in mesh.shape
@@ -169,10 +210,18 @@ def batch_pspec(batch_shape: Any, mesh: Mesh, *,
     return jax.tree.map(leaf_spec, batch_shape)
 
 
-def cache_pspecs(cache_shape: Any, mesh: Mesh) -> Any:
+def cache_pspecs(cache_shape: Any, mesh: Mesh, *,
+                 paged: bool = False) -> Any:
     """KV/state caches: (n_layers, B, W, heads, dh)-style leaves — batch dim
     (axis 1) over ('pod','data'); the heads/latent dim over 'model' when
-    divisible."""
+    divisible.
+
+    paged=True: the leaves are a PAGE POOL — (n_layers, n_pages, page_size,
+    heads, dh). Axis 1 is pages, not batch, and must stay REPLICATED over
+    the client plane: any slot's block table may point at any page (COW
+    shared prefixes make pages genuinely global), so there is no stable
+    page->device mapping. Only the kv-heads dim shards (over 'model'), so
+    paged decode attention runs head-parallel exactly like dense."""
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
     data_axes = data_axes if len(data_axes) > 1 else (
         data_axes[0] if data_axes else None)
@@ -183,13 +232,15 @@ def cache_pspecs(cache_shape: Any, mesh: Mesh) -> Any:
         if len(shape) < 2:
             return P(*([None] * len(shape)))
         spec = [None] * len(shape)
-        spec[1] = data_axes                      # batch
+        if not paged:
+            spec[1] = data_axes                  # batch (slot) dim
         if re.search(r"(^|/)(k|v)$", name) and len(shape) == 5:
             spec[3] = "model"                    # kv heads
-        if re.search(r"(^|/)ssm$", name) and len(shape) == 5:
-            spec[2] = "model"                    # mamba heads
-        if re.search(r"(^|/)state$", name) and len(shape) == 5:
-            spec[2] = "model"                    # rwkv heads
-        return guard_divisibility(tuple(spec), shape, mesh)
+        if not paged:
+            if re.search(r"(^|/)ssm$", name) and len(shape) == 5:
+                spec[2] = "model"                # mamba heads
+            if re.search(r"(^|/)state$", name) and len(shape) == 5:
+                spec[2] = "model"                # rwkv heads
+        return guard_divisibility(tuple(spec), shape, mesh, path=name)
 
     return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)

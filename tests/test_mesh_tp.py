@@ -1,0 +1,457 @@
+"""True tensor-parallel frozen body: the 'model' mesh axis carries COMPUTE.
+
+Training: the cohort round jitted against a 2D (data=2, model=4) host mesh
+— frozen body leaves enter with their params_pspecs 'model' shardings, so
+the scan-stacked blocks run attention head-parallel / MLP d_ff-parallel
+with XLA's collectives stitching partial sums — must match the
+single-device vmap round (params allclose at fp32, every metered byte
+exact, clear AND secure aggregation), and the compiled executable must
+hold NO full-size frozen-body buffer per device.
+
+Serving: the same TP shardings threaded through the serve steps (dense and
+paged engines) must be logit-identical to the unsharded engines, with the
+KV pools sharded along the kv-heads dim.
+
+The multi-device tests need >= 8 visible devices — run under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (CI's test-mesh8 job);
+on the default 1-device run they skip. The rule/fallback unit tests run
+anywhere (they only consult mesh.shape via a stub)."""
+import re
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import ProtocolConfig, SFPromptTrainer, SplitConfig, SplitModel
+from repro.core.aggregation import get_aggregator
+from repro.data import DATASETS, synthetic_image_dataset, synthetic_lm_dataset
+from repro.launch.mesh import make_host_mesh, report_sharding_fallbacks
+from repro.runtime import WireSpec
+from repro.serve import (PagedServeConfig, PagedServeEngine, Request,
+                         ServeConfig, ServeEngine, TenantBank)
+from repro.sharding import (cache_pspecs, params_pspecs,
+                            pop_sharding_fallbacks)
+
+KEY = jax.random.PRNGKey(0)
+N_LOCAL = 4
+BATCH = 4
+TP = 4          # 'model' axis size of the test mesh: (data=2, model=4)
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="tensor-parallel tests need 8 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+class _FakeMesh:
+    """Shape-only mesh stub: the pspec builders consult nothing beyond
+    mesh.shape, so rule/fallback unit tests run on any device count."""
+    shape = {"data": 2, "model": TP}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # same distinctive dims as test_mesh_round (32 / 48): every 'model'
+    # rule divides TP=4 except the 10-class head (a deliberate fallback)
+    cfg = get_config("vit-base").reduced(n_layers=3, d_model=32, d_ff=48)
+    split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=2,
+                        prune_gamma=0.5, local_epochs=1)
+    return cfg, split
+
+
+def make_trainer(cfg, split, *, k, aggregator=None, mesh=None):
+    model = SplitModel(cfg, split)
+    pcfg = ProtocolConfig(clients_per_round=k, local_epochs=1,
+                          batch_size=BATCH, momentum=0.0)
+    return SFPromptTrainer(model, pcfg, aggregator, mesh=mesh)
+
+
+def cohort_batch(k, *, seed=0):
+    data = synthetic_image_dataset(DATASETS["cifar10-syn"], k * N_LOCAL,
+                                   seed=seed, image_hw=32)
+    return {name: jnp.asarray(v).reshape((k, N_LOCAL) + v.shape[1:])
+            for name, v in data.items()}
+
+
+def tp_mesh():
+    return make_host_mesh(8, model=TP)
+
+
+# -------------------------------------------------------------- mesh shape
+@needs_mesh
+def test_make_host_mesh_2d():
+    mesh = tp_mesh()
+    assert dict(mesh.shape) == {"data": 2, "model": TP}
+    assert dict(make_host_mesh(8).shape) == {"data": 8}
+
+
+def test_make_host_mesh_rejects_indivisible_model():
+    n = jax.device_count()
+    with pytest.raises(ValueError, match="does not divide"):
+        make_host_mesh(model=n + 7 if (n % (n + 7)) else 3)
+
+
+# ------------------------------------------------------ TP training rounds
+@needs_mesh
+@pytest.mark.parametrize("secure", [False, True], ids=["clear", "secure"])
+def test_tp_round_matches_single_device(setup, secure):
+    """K=64 on the (data=2, model=4) mesh == the single-device vmap round:
+    params within fp32 reassociation tolerance (the TP all-reduce sums
+    partials in a different order), every metric close, and every METERED
+    BYTE exactly equal — wire accounting is shape-derived and must not
+    notice the layout."""
+    cfg, split = setup
+    k = 64
+    data = cohort_batch(k)
+    part = {"transmit": jnp.ones((k,), jnp.float32),
+            "aggregate": jnp.ones((k,), jnp.float32)}
+
+    def agg():
+        return (get_aggregator(secure=True, impl="ref", seed=11)
+                if secure else None)
+
+    ref = make_trainer(cfg, split, k=k, aggregator=agg())
+    st_r, m_r = ref.round(ref.init(KEY), data, dict(part))
+    tp = make_trainer(cfg, split, k=k, aggregator=agg(), mesh=tp_mesh())
+    st_t, m_t = tp.round(tp.init(KEY), data, dict(part))
+
+    for a, b in zip(jax.tree.leaves(st_r["params"]),
+                    jax.tree.leaves(st_t["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    assert set(m_r) == set(m_t)
+    for name in m_r:
+        np.testing.assert_allclose(m_r[name], m_t[name], rtol=1e-5,
+                                   err_msg=name)
+    assert ref.meter.totals.keys() == tp.meter.totals.keys()
+    for name in ref.meter.totals:
+        assert ref.meter.totals[name] == tp.meter.totals[name], name
+
+
+@needs_mesh
+def test_tp_client_updates_match_single_device(setup):
+    """The async dispatch primitive rides the same TP-jitted round."""
+    cfg, split = setup
+    k = 8
+    data = cohort_batch(k)
+    model = SplitModel(cfg, split)
+    pcfg = ProtocolConfig(clients_per_round=k, local_epochs=1,
+                          batch_size=BATCH, momentum=0.0,
+                          return_client_trainable=True)
+    ref = SFPromptTrainer(model, pcfg)
+    tr_r, _ = ref.client_updates(ref.init(KEY), data)
+    tp = SFPromptTrainer(model, pcfg, mesh=tp_mesh())
+    tr_t, _ = tp.client_updates(tp.init(KEY), data)
+    for a, b in zip(jax.tree.leaves(tr_r), jax.tree.leaves(tr_t)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@needs_mesh
+def test_tp_round_no_full_size_body_leaf_per_device(setup):
+    """Per-device storage proof: in the compiled TP round, every frozen
+    body leaf with a 'model'-sharded spec enters the ENTRY computation at
+    its 1/|model| LOCAL shape — the full-size shape must not appear among
+    the entry parameters. memory_analysis() backs the accounting."""
+    cfg, split = setup
+    k = 16
+    data = cohort_batch(k)
+    part = {"transmit": jnp.ones((k,), jnp.float32),
+            "aggregate": jnp.ones((k,), jnp.float32)}
+    mesh = tp_mesh()
+    tr = make_trainer(cfg, split, k=k, mesh=mesh)
+    state = tr.init(KEY)
+    round_jit = tr._get_round_jit(state, data, part, None)
+    compiled = round_jit.lower(state, data, part, None).compile()
+    assert compiled.memory_analysis() is not None
+
+    entry = re.search(r"ENTRY [^\n]*", compiled.as_text()).group(0)
+    entry_shapes = set(re.findall(r"f32\[[0-9,]+\]", entry))
+
+    specs = params_pspecs(state["params"], mesh)["body"]
+    checked = 0
+    for (path, leaf), (_, spec) in zip(
+            jax.tree_util.tree_leaves_with_path(state["params"]["body"]),
+            jax.tree_util.tree_leaves_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))):
+        local = tuple(
+            d // mesh.shape[a] if a in ("model",) else d
+            for d, a in zip(leaf.shape,
+                            tuple(spec) + (None,) * leaf.ndim))
+        if local == tuple(leaf.shape):
+            continue                      # replicated leaf (norms, biases)
+        name = jax.tree_util.keystr(path)
+        full_s = "f32[" + ",".join(map(str, leaf.shape)) + "]"
+        local_s = "f32[" + ",".join(map(str, local)) + "]"
+        assert local_s in entry_shapes, (name, local_s)
+        assert full_s not in entry_shapes, (
+            f"body leaf {name} enters full-size ({full_s}) on every "
+            f"device — the 'model' axis is storage-dead")
+        checked += 1
+    assert checked >= 4   # q/k/v/o + up/down across the stacked cycles
+
+
+@needs_mesh
+def test_tp_hbm_ratio_on_devices(setup):
+    """Honest device measurement: body bytes actually resident per device
+    under TP shardings vs the replicated total — the benchmarks/mesh_tp.py
+    hbm_ratio metric, floored at 3.0 in BENCH_kernels.json."""
+    cfg, split = setup
+    mesh = tp_mesh()
+    model = SplitModel(cfg, split)
+    params = model.init(KEY)
+    specs = params_pspecs(params, mesh)["body"]
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                      is_leaf=lambda x: isinstance(x, P))
+    put = jax.device_put(params["body"], sh)
+    full = sum(x.size * x.dtype.itemsize
+               for x in jax.tree.leaves(params["body"]))
+    per_dev = sum(x.addressable_shards[0].data.size * x.dtype.itemsize
+                  for x in jax.tree.leaves(put))
+    assert full / per_dev >= 3.0
+
+
+# --------------------------------------------------------- MoE narrowing
+def test_moe_frozen_arg_batches_only_expert_leaves():
+    """The MoE fallback broadcasts ONLY the ragged-dot expert leaves to
+    the client axis; attention/norm/router leaves stay unbatched
+    (in_axes=None) — the PR-6 HBM win survives for MoE configs."""
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced(n_layers=3)
+    split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=2,
+                        prune_gamma=0.5, local_epochs=1)
+    model = SplitModel(cfg, split)
+    tr = SFPromptTrainer(model, ProtocolConfig(clients_per_round=2,
+                                               batch_size=2, momentum=0.0))
+    assert tr._batch_frozen
+    params = model.init(KEY)
+    k = 3
+    operand, axes = tr._frozen_arg(params["body"], k)
+    n_expert = n_other = 0
+    for (path, leaf), (_, src), (_, ax) in zip(
+            jax.tree_util.tree_leaves_with_path(operand),
+            jax.tree_util.tree_leaves_with_path(params["body"]),
+            jax.tree_util.tree_leaves_with_path(
+                axes, is_leaf=lambda x: x is None or isinstance(x, int))):
+        if "experts" in jax.tree_util.keystr(path):
+            assert ax == 0
+            assert leaf.shape == (k,) + src.shape
+            n_expert += 1
+        else:
+            assert ax is None
+            assert leaf is src            # untouched, not even copied
+            n_other += 1
+    assert n_expert >= 3 and n_other >= 3
+
+
+def test_moe_round_keeps_attention_unbatched_in_hlo():
+    """Compiled proof of the narrowing: the jitted MoE round contains
+    K-stacked EXPERT tensors (the ragged-dot fallback) but NO K-stacked
+    attention projection — the frozen non-expert body never materializes
+    per-client copies. End-to-end round still trains.
+
+    n_layers=4 gives the body TWO stacked cycles while head/tail keep one,
+    so a K-stacked body leaf has a shape no trainable (legitimately
+    K-stacked) tail leaf can collide with."""
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced(n_layers=4)
+    split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=2,
+                        prune_gamma=0.5, local_epochs=1)
+    model = SplitModel(cfg, split)
+    k = 2
+    tr = SFPromptTrainer(model, ProtocolConfig(clients_per_round=k,
+                                               local_epochs=1,
+                                               batch_size=2, momentum=0.0))
+    toks = synthetic_lm_dataset(k * N_LOCAL, 16, cfg.vocab_size,
+                                seed=0)["tokens"]
+    data = {"tokens": jnp.asarray(toks).reshape(k, N_LOCAL, -1)}
+    part = {"transmit": jnp.ones((k,), jnp.float32),
+            "aggregate": jnp.ones((k,), jnp.float32)}
+    state = tr.init(KEY)
+    hlo = tr._round_jit.lower(state, data, part, None).compile().as_text()
+
+    body = state["params"]["body"]
+    attn = [leaf for path, leaf in jax.tree_util.tree_leaves_with_path(body)
+            if "attn" in jax.tree_util.keystr(path) and leaf.ndim >= 3]
+    experts = [leaf for path, leaf
+               in jax.tree_util.tree_leaves_with_path(body)
+               if "experts" in jax.tree_util.keystr(path)]
+    assert attn and experts
+
+    def stacked(leaf):
+        return "f32[" + ",".join(map(str, (k,) + leaf.shape)) + "]"
+
+    # trainable tail/prompt leaves ARE K-stacked by design — skip any body
+    # leaf whose stacked shape a trainable leaf could also produce
+    trainable = {stacked(leaf) for leaf in
+                 jax.tree.leaves(state["params"]["tail"])}
+    attn = [leaf for leaf in attn if stacked(leaf) not in trainable]
+    assert attn
+    for leaf in attn:
+        assert stacked(leaf) not in hlo, (
+            f"attention leaf {leaf.shape} is K-stacked — the MoE fallback "
+            f"is broadcasting more than the expert leaves")
+    assert any(stacked(leaf) in hlo for leaf in experts)
+
+    state, metrics = tr.round(state, data, dict(part))
+    assert np.isfinite(metrics["split_loss"])
+    assert int(state["round"]) == 1
+
+
+# ------------------------------------------------------- paged cache rules
+def test_cache_pspecs_paged_pool():
+    """Page-pool leaves (n_layers, n_pages, page_size, heads, dh): the
+    page axis must stay REPLICATED (any block table may reference any
+    page) while kv-heads shard over 'model'; dense leaves keep their slot
+    dim on the client plane."""
+    mesh = _FakeMesh()
+    pool = {"stack": {"pos0": {
+        "k": jax.ShapeDtypeStruct((3, 10, 8, 4, 8), jnp.float32),
+        "v": jax.ShapeDtypeStruct((3, 10, 8, 4, 8), jnp.float32),
+        "positions": jax.ShapeDtypeStruct((3, 10, 8), jnp.int32)}}}
+    paged = cache_pspecs(pool, mesh, paged=True)["stack"]["pos0"]
+    assert paged["k"] == P(None, None, None, "model", None)
+    assert paged["v"] == P(None, None, None, "model", None)
+    assert paged["positions"] == P(None, None, None)
+
+    dense = cache_pspecs(pool, mesh)["stack"]["pos0"]
+    assert dense["k"] == P(None, "data", None, "model", None)
+    assert dense["positions"] == P(None, "data", None)
+    pop_sharding_fallbacks()   # drain anything this unit test recorded
+
+
+def test_cache_pspecs_paged_guards_indivisible_heads():
+    """kv-heads that do not divide 'model' replicate — and the fallback is
+    RECORDED, not silent."""
+    mesh = _FakeMesh()
+    pool = {"k": jax.ShapeDtypeStruct((3, 10, 8, 6, 8), jnp.float32)}
+    pop_sharding_fallbacks()
+    spec = cache_pspecs(pool, mesh, paged=True)["k"]
+    assert spec == P(None, None, None, None, None)
+    fallbacks = pop_sharding_fallbacks()
+    assert any(axis == "model" and shape == (3, 10, 8, 6, 8)
+               for _, axis, shape in fallbacks)
+
+
+# --------------------------------------------------- fallback surfacing
+def test_divisibility_fallbacks_recorded_and_reported():
+    mesh = _FakeMesh()
+    params = {"body": {"q": {"w": jax.ShapeDtypeStruct((32, 48),
+                                                       jnp.float32)}},
+              "tail": {"head": {"w": jax.ShapeDtypeStruct((32, 10),
+                                                          jnp.float32)}}}
+    pop_sharding_fallbacks()
+    specs = params_pspecs(params, mesh)
+    assert specs["body"]["q"]["w"] == P(None, "model")   # 48 % 4 == 0
+    assert specs["tail"]["head"]["w"] == P(None, None)   # 10 % 4 != 0
+    with pytest.warns(UserWarning, match="head/w"):
+        entries = report_sharding_fallbacks("unit")
+    assert ("tail/head/w", "model", (32, 10)) in entries
+    # the report DRAINED the log: a second report has nothing to say
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert report_sharding_fallbacks() == ()
+
+
+def test_fallbacks_skip_mesh_absent_axes_and_unit_dims():
+    """Mesh-absent 'model' drops (1-D data mesh) and size-1 dims are
+    intentional replication, never reported."""
+    mesh1d = type("M", (), {"shape": {"data": 2}})()
+    pop_sharding_fallbacks()
+    params_pspecs({"q": {"w": jax.ShapeDtypeStruct((32, 48),
+                                                   jnp.float32)}}, mesh1d)
+    cache_pspecs({"k": jax.ShapeDtypeStruct((3, 1, 8, 4, 8), jnp.float32)},
+                 _FakeMesh())   # slot dim 1 on data=2: free replication
+    assert pop_sharding_fallbacks() == ()
+
+
+# ------------------------------------------------------------- TP serving
+def _serve_fixture():
+    cfg = get_config("qwen2.5-14b").reduced(n_layers=3, d_model=128,
+                                            d_ff=256, vocab_size=128)
+    split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=4)
+    model = SplitModel(cfg, split, WireSpec.make("fp32"))
+    params = model.init(KEY)
+    tails = [params["tail"],
+             jax.tree.map(lambda x: x * 1.1, params["tail"])]
+    prompts = [params["prompt"], params["prompt"] * 0.9]
+    bank = TenantBank.from_lists(tails, prompts)
+    reqs = [Request(rid=0, tenant=0,
+                    tokens=np.arange(9, dtype=np.int32) % 128,
+                    max_new=5, arrival=0),
+            Request(rid=1, tenant=1,
+                    tokens=(np.arange(14, dtype=np.int32) * 3) % 128,
+                    max_new=4, arrival=0),
+            Request(rid=2, tenant=0,
+                    tokens=(np.arange(6, dtype=np.int32) * 7) % 128,
+                    max_new=6, arrival=1)]
+    return model, params, bank, reqs
+
+
+@needs_mesh
+def test_serve_decode_tp_logit_identity():
+    """Dense engine, TP vs single-device: same tokens, logits allclose,
+    metered wire bytes exactly equal — decode attention runs head-parallel
+    (4 kv heads over model=4) without the tenants noticing."""
+    model, params, bank, reqs = _serve_fixture()
+    scfg = ServeConfig(n_slots=4, max_seq=48, decode_block=4)
+    ref = ServeEngine(model, params, bank, scfg, collect_logits=True)
+    s_r = ref.run(list(reqs))
+    tp = ServeEngine(model, params, bank, scfg, collect_logits=True,
+                     mesh=tp_mesh())
+    s_t = tp.run(list(reqs))
+    by_r = {f.req.rid: f for f in s_r["finished"]}
+    by_t = {f.req.rid: f for f in s_t["finished"]}
+    assert by_r.keys() == by_t.keys()
+    for rid in by_r:
+        np.testing.assert_array_equal(by_r[rid].tokens, by_t[rid].tokens)
+        np.testing.assert_allclose(by_r[rid].logits, by_t[rid].logits,
+                                   rtol=1e-5, atol=1e-5)
+    assert s_r["wire_bytes"] == s_t["wire_bytes"]
+
+
+@needs_mesh
+def test_serve_paged_tp_identity():
+    """paged == dense ON THE 2D MESH: the head-sharded page pool
+    (cache_pspecs paged=True) must not perturb a single logit or byte
+    relative to the head-sharded dense cache."""
+    model, params, bank, reqs = _serve_fixture()
+    mesh = tp_mesh()
+    dense = ServeEngine(model, params, bank,
+                        ServeConfig(n_slots=4, max_seq=48, decode_block=4),
+                        collect_logits=True, mesh=mesh)
+    s_d = dense.run(list(reqs))
+    paged = PagedServeEngine(
+        model, params, bank,
+        PagedServeConfig(n_slots=4, max_seq=48, decode_block=4,
+                         page_size=8),
+        collect_logits=True, mesh=mesh)
+    s_p = paged.run(list(reqs))
+    by_d = {f.req.rid: f for f in s_d["finished"]}
+    by_p = {f.req.rid: f for f in s_p["finished"]}
+    assert by_d.keys() == by_p.keys()
+    for rid in by_d:
+        np.testing.assert_array_equal(by_d[rid].tokens, by_p[rid].tokens)
+        np.testing.assert_allclose(by_d[rid].logits, by_p[rid].logits,
+                                   rtol=1e-6, atol=1e-6)
+    assert s_d["wire_bytes"] == s_p["wire_bytes"]
+
+
+@needs_mesh
+def test_serve_paged_tp_prefix_and_chunks_run():
+    """COW shared prefixes + chunked prefill still work with the pool
+    sharded over 'model' (copy_page/gather/scatter keep the sharding)."""
+    model, params, bank, reqs = _serve_fixture()
+    eng = PagedServeEngine(
+        model, params, bank,
+        PagedServeConfig(n_slots=4, max_seq=48, decode_block=4,
+                         page_size=8, shared_prefix=(5, 9, 2),
+                         prefill_chunk=6),
+        collect_logits=True, mesh=tp_mesh())
+    stats = eng.run(list(reqs))
+    assert stats["n_finished"] == len(reqs)
+    assert stats["page_copies"] >= 1
+    assert stats["prefill_chunks"] >= 1
+    assert eng.pool_alloc.n_used == 0        # everything released
