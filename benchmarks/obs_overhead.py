@@ -1,0 +1,115 @@
+"""Observability overhead: the flight recorder must be ~free.
+
+Times the SAME workload twice — once against the shared `NOOP` tracer
+(the default every component ships with) and once fully traced at the
+``step`` level — and gates on the ratio. Two measurements:
+
+  * `obs_overhead/traced_slowdown` — traced / untraced wall time for a
+    full SFPrompt protocol round on the tiny ViT. The round's jitted
+    compute dominates (milliseconds); the recorder adds a handful of
+    dict pushes (microseconds), so the ratio must stay ~1.0. Gated by a
+    HARD ceiling of 1.05 in BENCH_kernels.json ("ceilings" section):
+    if tracing ever costs more than 5% of a round, it is no longer
+    observation.
+  * `obs_overhead/event_ns` / `noop_event_ns` — microcost of one
+    `Tracer.event` push vs the disabled path (informational: the noop
+    path is the one every untraced hot loop pays).
+
+Reps are INTERLEAVED (traced, untraced, traced, ...) and each side
+takes its best (minimum) time, so shared-runner noise hits both arms
+equally instead of biasing the ratio.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import FAST, row, save
+from repro.configs import get_config
+from repro.core import ProtocolConfig, SFPromptTrainer, SplitConfig, SplitModel
+from repro.data import (DATASETS, iid_partition, select_clients,
+                        stack_clients, synthetic_image_dataset)
+from repro.obs import NOOP, Tracer
+
+K = 3
+
+
+def _setup():
+    cfg = get_config("vit-base").reduced(n_layers=3, d_model=64, d_ff=128)
+    split = SplitConfig(head_cycles=1, tail_cycles=1, prompt_len=4,
+                        prune_gamma=0.5, local_epochs=1)
+    model = SplitModel(cfg, split)
+    data = synthetic_image_dataset(DATASETS["cifar10-syn"], 192, seed=0,
+                                   image_hw=32)
+    clients = iid_partition(data, 8, seed=0)
+    return model, clients
+
+
+def _batch(clients, r):
+    import jax.numpy as jnp
+    idx = select_clients(len(clients), K, seed=0, round_idx=r)
+    return {k: jnp.asarray(v) for k, v in
+            stack_clients(clients, idx).items()}
+
+
+def _round_time(trainer, state, batch) -> float:
+    t0 = time.perf_counter()
+    out_state, _ = trainer.round(state, batch)
+    jax.block_until_ready(out_state["params"])
+    return time.perf_counter() - t0
+
+
+def run():
+    model, clients = _setup()
+    pcfg = ProtocolConfig(clients_per_round=K, local_epochs=1, batch_size=8,
+                          lr_local=0.05, lr_split=0.05)
+    key = jax.random.PRNGKey(0)
+    batch = _batch(clients, 0)
+
+    traced = SFPromptTrainer(model, pcfg, tracer=Tracer("step"))
+    plain = SFPromptTrainer(model, pcfg)   # NOOP tracer
+    st_traced = traced.init(key)
+    st_plain = plain.init(key)
+    # compile both jitted rounds before any timed rep
+    _round_time(traced, st_traced, batch)
+    _round_time(plain, st_plain, batch)
+
+    reps = 5 if FAST else 9
+    best_traced = best_plain = float("inf")
+    for _ in range(reps):
+        best_traced = min(best_traced, _round_time(traced, st_traced, batch))
+        best_plain = min(best_plain, _round_time(plain, st_plain, batch))
+    slowdown = best_traced / best_plain
+
+    # recorder microcost: one event push vs the disabled path
+    n = 20_000 if FAST else 100_000
+    live = Tracer("step", capacity=1 << 12)
+    t0 = time.perf_counter()
+    for i in range(n):
+        live.event("bench.tick", level=2, i=i, a=1.0, b=2.0)
+    event_ns = (time.perf_counter() - t0) / n * 1e9
+    t0 = time.perf_counter()
+    for i in range(n):
+        NOOP.event("bench.tick", level=2, i=i, a=1.0, b=2.0)
+    noop_ns = (time.perf_counter() - t0) / n * 1e9
+
+    n_records = len(traced.tracer.records())
+    out = {"obs_overhead": {
+        "traced_slowdown": slowdown,
+        "round_traced_s": best_traced,
+        "round_plain_s": best_plain,
+        "event_ns": event_ns,
+        "noop_event_ns": noop_ns,
+        "records_per_round": n_records / (reps + 1),
+    }}
+    save("obs_overhead", out)
+    return [row("obs_overhead/round", best_traced * 1e6,
+                f"traced={best_traced * 1e3:.1f}ms "
+                f"plain={best_plain * 1e3:.1f}ms "
+                f"slowdown={slowdown:.3f}x "
+                f"event={event_ns:.0f}ns noop={noop_ns:.0f}ns")]
+
+
+if __name__ == "__main__":
+    run()

@@ -16,7 +16,6 @@ on a mesh that axis shards over ('pod','data') — see launch/dryrun.py.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
@@ -28,11 +27,12 @@ from repro.core import losses, pruning
 from repro.core.aggregation import broadcast_to_clients, get_aggregator
 from repro.core.local_update import dp_clip_and_noise, local_epochs
 from repro.core.split import SplitModel
+from repro.obs.trace import NOOP
 from repro.optim import Optimizer, adamw, apply_updates, sgd
 from repro.privacy.dp import DP_SEED, PrivacyAccountant
 from repro.runtime.meter import EDGE, SECURE, TrafficMeter
-from repro.sharding.rules import (cohort_pspecs, format_sharding_fallbacks,
-                                  params_pspecs, pop_sharding_fallbacks)
+from repro.sharding.rules import (cohort_pspecs, params_pspecs,
+                                  report_fallbacks)
 
 Params = Dict[str, Any]
 
@@ -73,9 +73,12 @@ class SFPromptTrainer:
 
     def __init__(self, model: SplitModel, pcfg: ProtocolConfig,
                  aggregator=None, *, mesh=None, fsdp: bool = False,
-                 donate_cohort: bool = False):
+                 donate_cohort: bool = False, tracer=None):
         self.model = model
         self.pcfg = pcfg
+        # flight recorder (repro.obs): pure observation — the default NOOP
+        # records nothing and the round math never reads it
+        self.tracer = tracer if tracer is not None else NOOP
         self.opt_local = make_optimizer(pcfg, pcfg.lr_local)
         self.opt_split = make_optimizer(pcfg, pcfg.lr_split)
         # frozen segments enter the cohort vmap UNBATCHED (in_axes=None) so
@@ -104,6 +107,7 @@ class SFPromptTrainer:
                               l2_clip=pcfg.dp_clip, delta=pcfg.dp_delta)
             if pcfg.dp_noise_multiplier > 0 else None)
         self.meter = TrafficMeter()   # measured bytes across rounds
+        self.meter.attach_tracer(self.tracer)
         self.last_client_trainable = None   # per-client (tail, prompt) of
         # the most recent round, populated iff pcfg.return_client_trainable
         self._round_jit = jax.jit(self._round) if mesh is None else None
@@ -164,10 +168,7 @@ class SFPromptTrainer:
         # surface any divisibility fallbacks the spec builders recorded —
         # a rule that wanted 'model'/'data' but could not divide it means
         # this mesh silently replicates something it was sized to shard
-        fallbacks = pop_sharding_fallbacks()
-        if fallbacks:
-            warnings.warn(format_sharding_fallbacks(fallbacks),
-                          stacklevel=2)
+        report_fallbacks("protocol.mesh_jit", self.tracer)
         donate = (0, 1, 3) if self._donate_cohort else ()
         return jax.jit(
             self._round,
@@ -413,25 +414,36 @@ class SFPromptTrainer:
         `fed.RoundPlan.participation()` dict; None means every client is on
         time (the seed behavior). `init_tails` (K-stacked) starts each
         client from its own personalized tail."""
+        K = jax.tree.leaves(client_data)[0].shape[0]
         if participation is None:
-            K = jax.tree.leaves(client_data)[0].shape[0]
             ones = jnp.ones((K,), jnp.float32)
             participation = {"transmit": ones, "aggregate": ones}
-        round_jit = self._get_round_jit(state, client_data, participation,
-                                        init_tails)
-        state, metrics, extras = round_jit(state, client_data,
-                                           participation, init_tails)
-        self.last_client_trainable = extras.get("trainable")
-        metrics = {k: float(v) for k, v in metrics.items()}
-        if self.accountant is not None:
-            # one Gaussian release of each sampled client's update per
-            # round — the ledger tracks the per-client (local-model) view
-            self.accountant.spend()
-            metrics["dp/epsilon"] = self.accountant.epsilon()
-        self.meter.absorb({k.removeprefix("wire/").removesuffix("_bytes"): v
-                           for k, v in metrics.items()
-                           if k.startswith("wire/")},
-                          clients=metrics.get("cohort/active"))
+        tracer = self.tracer
+        with tracer.span("round") as sp:
+            round_jit = self._get_round_jit(state, client_data,
+                                            participation, init_tails)
+            if tracer.enabled:
+                tracer.event("round.dispatch", level=2, cohort=K,
+                             personalized_tails=init_tails is not None)
+            with tracer.annotate("sfprompt.round"):
+                state, metrics, extras = round_jit(state, client_data,
+                                                   participation, init_tails)
+            self.last_client_trainable = extras.get("trainable")
+            metrics = {k: float(v) for k, v in metrics.items()}
+            if self.accountant is not None:
+                # one Gaussian release of each sampled client's update per
+                # round — the ledger tracks the per-client (local-model)
+                # view
+                self.accountant.spend()
+                metrics["dp/epsilon"] = self.accountant.epsilon()
+            wire = {k.removeprefix("wire/").removesuffix("_bytes"): v
+                    for k, v in metrics.items() if k.startswith("wire/")}
+            self.meter.absorb(wire, clients=metrics.get("cohort/active"))
+            if tracer.enabled:
+                # the span carries the SAME floats the meter absorbed —
+                # per-span byte attrs sum exactly to the stream totals
+                sp.set(round=self.meter.rounds, cohort=K,
+                       active=metrics.get("cohort/active"), **wire)
         return state, metrics
 
     def client_updates(self, state: Params, client_data,

@@ -54,6 +54,7 @@ from repro.fed.population import Population
 from repro.fed.sampler import ClientSampler
 from repro.fed.scheduler import (LINK_REGIMES, FullParticipationScheduler,
                                  RoundScheduler)
+from repro.obs.trace import NOOP
 from repro.runtime.meter import EDGE, PARAMS, SECURE, TrafficMeter
 
 # RNG domain tag for async dispatch jitter/dropout draws — disjoint from
@@ -159,7 +160,7 @@ class AsyncRoundEngine:
                  sampler: ClientSampler,
                  scheduler: Optional[RoundScheduler] = None,
                  acfg: AsyncConfig = AsyncConfig(), *,
-                 aggregator=None):
+                 aggregator=None, tracer=None):
         self.trainer = trainer
         self.population = population
         self.sampler = sampler
@@ -208,13 +209,22 @@ class AsyncRoundEngine:
         self.meter = (getattr(trainer, "meter", None)
                       or TrafficMeter()) if trainer is not None \
             else TrafficMeter()
+        # flight recorder: async records ride the SIMULATED clock
+        # (event_at/span_at with t_sim) — a wall-clock trace of a
+        # simulation would be meaningless. Inherit the trainer's tracer
+        # unless one is passed explicitly.
+        if tracer is None and trainer is not None:
+            tracer = getattr(trainer, "tracer", None)
+        self.tracer = tracer if tracer is not None else NOOP
+        self.meter.attach_tracer(self.tracer)
 
         self.state: Optional[Dict[str, Any]] = None
         self.version = 0           # flush count == model version
         self.dispatch_idx = 0      # dispatch groups launched so far
         self.t_sim = 0.0           # simulated wall clock (seconds)
         self.arrivals = 0          # live contributions received, ever
-        self.buffer = DeltaBuffer(buffer_size=acfg.buffer_size)
+        self.buffer = DeltaBuffer(buffer_size=acfg.buffer_size,
+                                  tracer=self.tracer)
         self.in_flight: List[_InFlight] = []
         n = sampler.n_clients
         self.ledger = StalenessLedger(n)
@@ -308,6 +318,10 @@ class AsyncRoundEngine:
             self.meter.absorb({PARAMS: k * self._param_bytes()},
                               clients=0)
 
+        tracer = self.tracer
+        if tracer.enabled:
+            tracer.event_at("async.dispatch", self.t_sim, group=d,
+                            cohort=k, version=self.version)
         for i in range(k):
             self.in_flight.append(_InFlight(
                 client_id=int(cohort[i]), dispatch_idx=d, position=i,
@@ -316,6 +330,14 @@ class AsyncRoundEngine:
                 transmit_frac=float(transmit[i]),
                 size=float(sizes[i]), keep=int(keep),
                 contribution=contributions[i]))
+            if tracer.enabled:
+                # one sim-clock span per in-flight client, laned by client
+                # id so overlapping flights stack in the Chrome trace
+                tracer.span_at("async.client", self.t_sim,
+                               float(finish[i]), level=2,
+                               lane=int(cohort[i]), group=d,
+                               version=self.version,
+                               dropped=bool(dropped[i]))
         # wall accounting: the group's client compute and wire time happen
         # regardless of when the server looks at the results; dying
         # clients only burn their fraction
@@ -351,6 +373,11 @@ class AsyncRoundEngine:
                   key=lambda f: (f.finish_t,) + f.order_key())
         self.in_flight.remove(nxt)
         self.t_sim = max(self.t_sim, nxt.finish_t)
+        if self.tracer.enabled:
+            self.tracer.event_at(
+                "async.arrival", self.t_sim, client=nxt.client_id,
+                group=nxt.dispatch_idx, version=nxt.version,
+                staleness=self.version - nxt.version, dropped=nxt.dropped)
         self.buffer.append(BufferEntry(
             client_id=nxt.client_id, dispatch_idx=nxt.dispatch_idx,
             position=nxt.position, version=nxt.version, size=nxt.size,
@@ -429,6 +456,12 @@ class AsyncRoundEngine:
         span = self.t_sim - self._span_mark
         self._span_mark = self.t_sim
         self.meter.absorb_wall(server_busy_s=busy, span_s=span)
+        if self.tracer.enabled:
+            self.tracer.event_at(
+                "async.flush", self.t_sim, version=self.version,
+                n_entries=len(entries), n_live=len(live),
+                mean_staleness=float(np.mean(stale)) if stale else 0.0,
+                server_busy_s=busy)
         self.version += 1
 
     def run_flushes(self, n_flushes: int) -> Dict[str, float]:
@@ -588,7 +621,8 @@ class AsyncRoundEngine:
 
         self.buffer = DeltaBuffer(buffer_size=self.acfg.buffer_size,
                                   entries=_unpack(run.get("buffer"),
-                                                  BufferEntry))
+                                                  BufferEntry),
+                                  tracer=self.tracer)
         self.in_flight = _unpack(run.get("in_flight"), _InFlight)
         self.flush_history = []
         return True

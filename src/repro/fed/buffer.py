@@ -65,9 +65,14 @@ class BufferEntry:
 
 @dataclass
 class DeltaBuffer:
-    """Bounded arrival buffer; `full` triggers the engine's flush."""
+    """Bounded arrival buffer; `full` triggers the engine's flush.
+
+    `tracer` (optional, a repro.obs Tracer) records append/drain as
+    step-level events on the SIMULATED clock (each entry's arrival_t) —
+    set by the owning engine, never checkpointed."""
     buffer_size: int
     entries: List[BufferEntry] = field(default_factory=list)
+    tracer: Any = None
 
     def __post_init__(self):
         if self.buffer_size < 1:
@@ -89,11 +94,20 @@ class DeltaBuffer:
 
     def append(self, entry: BufferEntry) -> None:
         self.entries.append(entry)
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.event_at(
+                "buffer.append", entry.arrival_t, level=2,
+                client=entry.client_id, group=entry.dispatch_idx,
+                version=entry.version, dropped=entry.dropped,
+                fill=self.n_live)
 
     def drain(self) -> List[BufferEntry]:
         """Pop every entry in DISPATCH order (see module docstring)."""
         out = sorted(self.entries, key=BufferEntry.order_key)
         self.entries = []
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.event("buffer.drain", level=2, n=len(out),
+                              n_live=sum(not e.dropped for e in out))
         return out
 
     @staticmethod

@@ -11,12 +11,9 @@ this module never touches jax device state.
 """
 from __future__ import annotations
 
-import warnings
-
 import jax
 
-from repro.sharding.rules import (format_sharding_fallbacks,
-                                  pop_sharding_fallbacks)
+from repro.sharding.rules import report_fallbacks
 
 # v5e hardware constants for the roofline (per chip)
 PEAK_FLOPS_BF16 = 197e12       # FLOP/s
@@ -58,18 +55,15 @@ def make_host_mesh(n: int = 0, *, model: int = 1):
                          devices=devices[:n])
 
 
-def report_sharding_fallbacks(context: str = "") -> tuple:
+def report_sharding_fallbacks(context: str = "", tracer=None) -> tuple:
     """Drain the divisibility fallbacks recorded while building partition
     specs (sharding.rules.guard_divisibility) and warn ONCE if any rule
     quietly fell back to replication — a mis-sized mesh should be visible,
-    not silently slow. Returns the drained (path, axis, shape) tuples so
-    launchers can also log them."""
-    entries = pop_sharding_fallbacks()
-    if entries:
-        prefix = f"[{context}] " if context else ""
-        warnings.warn(prefix + format_sharding_fallbacks(entries),
-                      stacklevel=2)
-    return entries
+    not silently slow. With a tracer, the entries additionally land as a
+    structured `sharding.fallback` event (sharding.rules.report_fallbacks).
+    Returns the drained (path, axis, shape) tuples so launchers can also
+    log them."""
+    return report_fallbacks(context, tracer)
 
 
 def data_parallel_size(mesh) -> int:

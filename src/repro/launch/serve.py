@@ -40,6 +40,8 @@ from repro.checkpoint import load_checkpoint
 from repro.configs import get_config
 from repro.core import SplitConfig, SplitModel
 from repro.core.comm import serve_comm_breakdown
+from repro.obs import MetricsRegistry, export_all, make_tracer
+from repro.obs.trace import LEVELS
 from repro.runtime import WireSpec
 from repro.runtime.meter import MB
 from repro.serve import (PagedServeConfig, PagedServeEngine, ServeConfig,
@@ -126,6 +128,20 @@ def main(argv=None):
                          "final.npz); default: fresh random init")
     ap.add_argument("--wire", default="fp32", choices=("fp32", "bf16", "int8"),
                     help="codec for the smashed tensors on both boundaries")
+    ap.add_argument("--trace-out", default=None,
+                    help="flight-recorder export basename: writes "
+                         "<base>.jsonl, <base>.trace.json (Chrome/Perfetto) "
+                         "and <base>.prom; implies --trace-level round")
+    ap.add_argument("--trace-level", default="off", choices=list(LEVELS),
+                    help="flight-recorder detail: off = zero-overhead noop, "
+                         "round = admission/prefill/retire spans + meter "
+                         "bytes, step = decode steps and page churn too")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="print a metrics-registry snapshot every N engine "
+                         "steps (0 = only at the end when tracing is on)")
+    ap.add_argument("--trace-profiler", action="store_true",
+                    help="wrap traced device dispatches in jax.profiler "
+                         "TraceAnnotations (visible in a profiler capture)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -139,6 +155,11 @@ def main(argv=None):
     if args.params:
         loaded = load_checkpoint(args.params)
         params = jax.tree.map(jnp.asarray, loaded)
+
+    trace_level = args.trace_level
+    if args.trace_out and trace_level == "off":
+        trace_level = "round"
+    tracer = make_tracer(trace_level, profiler=args.trace_profiler)
 
     bank = personalized_bank(model, params, args.tenants)
     mesh = None
@@ -159,7 +180,7 @@ def main(argv=None):
                              n_pages=args.n_pages,
                              shared_prefix=prefix or None,
                              prefill_chunk=args.prefill_chunk),
-            mesh=mesh)
+            mesh=mesh, tracer=tracer)
     else:
         if args.shared_prefix or args.prefill_chunk:
             raise SystemExit("--shared-prefix/--prefill-chunk need the "
@@ -170,7 +191,7 @@ def main(argv=None):
                                          decode_block=args.decode_block,
                                          donate=not args.no_donate,
                                          impl=args.impl),
-                             mesh=mesh)
+                             mesh=mesh, tracer=tracer)
     reqs = synthetic_requests(WorkloadConfig(
         n_requests=args.requests,
         mean_interarrival=args.mean_interarrival,
@@ -178,7 +199,22 @@ def main(argv=None):
         new_token_choices=tuple(args.new_token_choices),
         n_tenants=args.tenants, vocab_size=cfg.vocab_size,
         seed=args.seed))
-    stats = engine.run(reqs)
+
+    registry = MetricsRegistry()
+    registry.bind_engine(engine)
+    if args.page_size > 0:
+        registry.bind_pool(engine.pool_alloc)
+
+    on_step = None
+    if args.metrics_every:
+        import json as _json
+
+        def on_step(step_idx, _every=args.metrics_every):
+            if step_idx % _every == 0:
+                print(_json.dumps({"step": step_idx,
+                                   "metrics": registry.snapshot()},
+                                  sort_keys=True, default=str), flush=True)
+    stats = engine.run(reqs, on_step=on_step)
 
     print(f"{cfg.name}: {stats['n_finished']} requests over "
           f"{args.tenants} tenants | {stats['tokens_out']} tokens in "
@@ -213,6 +249,15 @@ def main(argv=None):
               f"{stats['prefix_hits'] + stats['prefix_misses']} "
               f"(ratio {stats['prefix_hit_ratio']:.2f}) | "
               f"prefill chunks {stats['prefill_chunks']}")
+    if tracer.enabled and args.trace_out:
+        paths = export_all(tracer, args.trace_out, meter=engine.meter,
+                           registry=registry)
+        for fmt, p in sorted(paths.items()):
+            print(f"trace [{fmt}]: {p}", flush=True)
+    elif tracer.enabled:
+        import json as _json
+        print(_json.dumps({"metrics": registry.snapshot()}, sort_keys=True,
+                          default=str), flush=True)
     return stats
 
 

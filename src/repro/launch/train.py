@@ -69,6 +69,8 @@ from repro.fed import (AsyncConfig, AsyncRoundEngine, ClientSampler,
                        FederatedEngine, Population, RoundScheduler,
                        StragglerConfig)
 from repro.fed.scheduler import LINK_REGIMES
+from repro.obs import MetricsRegistry, export_all, make_tracer
+from repro.obs.trace import LEVELS
 
 
 def build_data(args, cfg):
@@ -104,7 +106,7 @@ def build_mesh(args):
                           model=max(1, getattr(args, "mesh_model", 1)))
 
 
-def build_trainer(args, model, mesh=None):
+def build_trainer(args, model, mesh=None, tracer=None):
     if args.method.startswith("sfprompt"):
         dp_noise = 0.0
         if args.dp_epsilon > 0:
@@ -141,14 +143,22 @@ def build_trainer(args, model, mesh=None):
             aggregator = None
         return SFPromptTrainer(model, pcfg, aggregator, mesh=mesh,
                                fsdp=args.fsdp,
-                               donate_cohort=mesh is not None)
+                               donate_cohort=mesh is not None,
+                               tracer=tracer)
     if args.method == "fl":
-        return FLTrainer(model, BaselineConfig(
+        trainer = FLTrainer(model, BaselineConfig(
             local_epochs=args.local_epochs, batch_size=args.batch_size,
             lr=args.lr))
-    return SFLTrainer(model, BaselineConfig(
-        local_epochs=args.local_epochs, batch_size=args.batch_size,
-        lr=args.lr), mode=args.method.split("-")[1])
+    else:
+        trainer = SFLTrainer(model, BaselineConfig(
+            local_epochs=args.local_epochs, batch_size=args.batch_size,
+            lr=args.lr), mode=args.method.split("-")[1])
+    # baselines have no tracer plumbing, but their meter can still emit
+    # exact per-absorb byte events into the flight recorder
+    meter = getattr(trainer, "meter", None)
+    if meter is not None and tracer is not None:
+        meter.attach_tracer(tracer)
+    return trainer
 
 
 def build_scheduler(args, population, cfg, split):
@@ -286,6 +296,20 @@ def main():
                     help="continue from the newest checkpoint under --out")
     ap.add_argument("--init-params", default=None,
                     help="checkpoint to warm-start from (pretrained backbone)")
+    ap.add_argument("--trace-out", default=None,
+                    help="flight-recorder export basename: writes "
+                         "<base>.jsonl, <base>.trace.json (Chrome/Perfetto) "
+                         "and <base>.prom; implies --trace-level round")
+    ap.add_argument("--trace-level", default="off", choices=list(LEVELS),
+                    help="flight-recorder detail: off = zero-overhead noop, "
+                         "round = lifecycle spans + meter bytes, step = per-"
+                         "dispatch/arrival/buffer events too")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="print a metrics-registry snapshot every N rounds "
+                         "(0 = only at the end when tracing is on)")
+    ap.add_argument("--trace-profiler", action="store_true",
+                    help="wrap traced device dispatches in jax.profiler "
+                         "TraceAnnotations (visible in a profiler capture)")
     args = ap.parse_args()
     if args.personalize_tails and not args.method.startswith("sfprompt"):
         ap.error("--personalize-tails needs an sfprompt method")
@@ -339,9 +363,21 @@ def main():
             f"// --clients {args.clients}); lower --batch-size or raise "
             f"--samples")
 
-    trainer = build_trainer(args, model, build_mesh(args))
+    trace_level = args.trace_level
+    if args.trace_out and trace_level == "off":
+        trace_level = "round"
+    tracer = make_tracer(trace_level, profiler=args.trace_profiler)
+
+    trainer = build_trainer(args, model, build_mesh(args), tracer=tracer)
     engine = build_engine(args, trainer, population, cfg, split)
     ckpt_dir = os.path.join(args.out, "ckpt")
+
+    registry = MetricsRegistry()
+    meter = getattr(trainer, "meter", None)
+    if meter is not None:
+        registry.bind_meter(meter)
+    if getattr(engine, "ledger", None) is not None:
+        registry.bind_ledger(engine.ledger)
 
     is_async = args.async_buffer > 0
 
@@ -402,15 +438,25 @@ def main():
         log.write(json.dumps(rec) + "\n")
         log.flush()
         print(rec, flush=True)
+        if args.metrics_every and (r + 1) % args.metrics_every == 0:
+            print(json.dumps({"metrics": registry.snapshot()},
+                             sort_keys=True), flush=True)
         if args.ckpt_every and (r + 1) % args.ckpt_every == 0:
             engine.save(ckpt_dir)
 
     engine.save(ckpt_dir)
     save_checkpoint(os.path.join(args.out, "final.npz"), engine.params)
     print("saved", os.path.join(args.out, "final.npz"), "log:", log_path)
-    meter = getattr(trainer, "meter", None)
     if meter is not None:
         print(meter.report())
+    if tracer.enabled and args.trace_out:
+        paths = export_all(tracer, args.trace_out, meter=meter,
+                           registry=registry)
+        for fmt, p in sorted(paths.items()):
+            print(f"trace [{fmt}]: {p}", flush=True)
+    elif tracer.enabled:
+        print(json.dumps({"metrics": registry.snapshot()}, sort_keys=True),
+              flush=True)
     if is_async:
         print(f"async: {engine.version} flush(es) over {engine.t_sim:.1f} "
               f"simulated s, staleness mean "

@@ -1,0 +1,19 @@
+"""Observability: flight recorder, metrics registry, exporters.
+
+`repro.obs` is pure observation — attaching it changes no engine output,
+no metered byte, no RNG draw (tests/test_obs.py pins bit-identity with
+tracing off and exact byte accounting with tracing on). See
+ARCHITECTURE.md §Observability for the span taxonomy.
+"""
+from repro.obs.trace import (            # noqa: F401
+    LEVEL_OFF, LEVEL_ROUND, LEVEL_STEP, LEVELS, NOOP,
+    NoopTracer, Tracer, make_tracer, span_tree, strip_times, sum_stream,
+    to_jsonl,
+)
+from repro.obs.metrics import (          # noqa: F401
+    Counter, Gauge, Histogram, MetricsRegistry,
+)
+from repro.obs.export import (           # noqa: F401
+    chrome_trace, export_all, meter_final_record, prometheus_text,
+    write_chrome_trace, write_jsonl, write_prometheus,
+)

@@ -47,18 +47,33 @@ class TrafficMeter:
         self.rounds = 0
         self.client_rounds = 0.0   # sum over rounds of active clients
         self.wall: Dict[str, float] = {n: 0.0 for n in WALL_STREAMS}
+        # flight-recorder hook (repro.obs): when attached, every absorb
+        # emits a `meter.absorb` event carrying the SAME host floats it
+        # adds to `totals`, so a trace's per-stream event sums equal the
+        # meter totals float-exactly (tools/trace_check.py enforces it).
+        # None (the default) keeps the meter observation-free.
+        self.tracer = None
+
+    def attach_tracer(self, tracer) -> None:
+        self.tracer = tracer if (tracer is not None
+                                 and tracer.enabled) else None
 
     def absorb(self, counts: Mapping[str, float], *,
                clients: Optional[float] = None) -> None:
         """Fold one round's counters (traced scalars or floats) in.
         `clients`: how many clients' traffic the round actually carried
         (active cohort under dropouts); defaults to unknown -> 0 added."""
+        folded: Dict[str, float] = {}
         for name, v in counts.items():
             if name in self.totals:
-                self.totals[name] += float(v)
+                fv = float(v)
+                self.totals[name] += fv
+                folded[name] = fv
         self.rounds += 1
         if clients is not None:
             self.client_rounds += float(clients)
+        if self.tracer is not None:
+            self.tracer.event("meter.absorb", round=self.rounds, **folded)
 
     def absorb_wall(self, *, server_busy_s: float = 0.0,
                     client_compute_s: float = 0.0, wire_s: float = 0.0,
@@ -70,6 +85,11 @@ class TrafficMeter:
         self.wall["client_compute_s"] += float(client_compute_s)
         self.wall["wire_s"] += float(wire_s)
         self.wall["span_s"] += float(span_s)
+        if self.tracer is not None:
+            self.tracer.event("meter.wall", level=2,
+                              server_busy_s=float(server_busy_s),
+                              client_compute_s=float(client_compute_s),
+                              wire_s=float(wire_s), span_s=float(span_s))
 
     def overlap(self) -> Dict[str, float]:
         """Wall-clock utilization ratios: work-seconds per span-second

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.split import SplitModel
+from repro.obs.trace import NOOP
 from repro.runtime.boundary import BOUNDARY_NAMES
 from repro.runtime.meter import TrafficMeter
 from repro.serve.bank import TenantBank
@@ -43,7 +44,7 @@ from repro.serve.steps import (make_batched_decode_step,
                                make_multi_decode_step, make_step_shardings,
                                make_tenant_prefill_step)
 from repro.serve.workload import Request
-from repro.sharding import format_sharding_fallbacks, pop_sharding_fallbacks
+from repro.sharding.rules import report_fallbacks
 
 _DONATION_WARNING_FILTERED = False
 
@@ -99,7 +100,7 @@ class Finished:
 class ServeEngine:
     def __init__(self, model: SplitModel, shared_params, bank: TenantBank,
                  cfg: ServeConfig, *, collect_logits: bool = False,
-                 mesh=None):
+                 mesh=None, tracer=None):
         if model.cfg.arch_type in ("vit", "audio", "vlm") \
                 or model.cfg.encoder is not None:
             raise ValueError(
@@ -112,7 +113,12 @@ class ServeEngine:
         self.bank = bank
         self.cfg = cfg
         self.collect_logits = collect_logits
+        # flight recorder (repro.obs): observation only — the default NOOP
+        # records nothing; byte-carrying records appear ONLY where the
+        # host already folds bytes (the meter flush), never per token
+        self.tracer = tracer if tracer is not None else NOOP
         self.meter = TrafficMeter()
+        self.meter.attach_tracer(self.tracer)
 
         S = cfg.n_slots
         self.cache = model.init_cache(S, seq_len=cfg.max_seq,
@@ -186,14 +192,13 @@ class ServeEngine:
         self.tokens_out = 0
         self._occupancy_sum = 0.0
 
-    @staticmethod
-    def _report_fallbacks() -> None:
+    def _report_fallbacks(self, context: str = "serve.steps") -> None:
         """Surface any divisibility fallbacks the spec builders recorded —
         a kv-head count that does not divide 'model' means this mesh is
-        silently replicating what it was sized to shard."""
-        fb = pop_sharding_fallbacks()
-        if fb:
-            warnings.warn(format_sharding_fallbacks(fb), stacklevel=3)
+        silently replicating what it was sized to shard. Routed through
+        the structured event log when a tracer is attached; the warning
+        stays either way."""
+        report_fallbacks(context, self.tracer)
 
     # -------------------------------------------------------------- wire
     @staticmethod
@@ -236,9 +241,14 @@ class ServeEngine:
                              f"{req.tenant} (bank has {self.bank.n_tenants})")
         if len(self._queue) >= self.cfg.max_queue:
             self.rejected += 1
+            self.tracer.event("serve.reject", level=2, rid=req.rid,
+                              tenant=req.tenant)
             return False
         self._t_enqueue[req.rid] = time.perf_counter()
         self._queue.append(req)
+        self.tracer.event("serve.submit", level=2, rid=req.rid,
+                          tenant=req.tenant, prompt_len=len(req.tokens),
+                          max_new=req.max_new)
         return True
 
     @property
@@ -260,10 +270,14 @@ class ServeEngine:
         batch = {"tokens": jnp.asarray(prompt_np)}
         tail = self.bank.tail(req.tenant)
         prompt = self.bank.prompt(req.tenant)
-        tok, logits, slot_cache, wb = self._prefill(
-            self.shared, tail, prompt, batch, self._blank)
-        self.cache = self._write_slot(self.cache, slot_cache,
-                                      jnp.int32(slot))
+        with self.tracer.span("serve.prefill", rid=req.rid,
+                              tenant=req.tenant, slot=slot,
+                              prompt_len=len(req.tokens)):
+            with self.tracer.annotate("serve.prefill"):
+                tok, logits, slot_cache, wb = self._prefill(
+                    self.shared, tail, prompt, batch, self._blank)
+            self.cache = self._write_slot(self.cache, slot_cache,
+                                          jnp.int32(slot))
         self._absorb_wire(wb)
         self.prefill_count += 1
         self.tokens_out += 1
@@ -286,6 +300,10 @@ class ServeEngine:
         return None
 
     def _finish(self, st: _SlotState) -> Finished:
+        # retirement attrs stay deterministic — token COUNTS, never the
+        # wall-clock latency (same-seed traces must compare equal)
+        self.tracer.event("serve.retire", rid=st.req.rid,
+                          tenant=st.req.tenant, n_tokens=len(st.tokens))
         return Finished(
             req=st.req, tokens=np.asarray(st.tokens, np.int32),
             latency_s=time.perf_counter() - st.t_submit,
@@ -368,7 +386,11 @@ class ServeEngine:
             self.step_idx += 1
             return done
         n_eff = self._decode_bucket(int(remaining.max()))
-        toks, logits, wb = self._dispatch_decode(remaining, n_eff)
+        with self.tracer.span("serve.decode", level=2, step=self.step_idx,
+                              n_tokens=n_eff,
+                              active=int((remaining > 0).sum())):
+            with self.tracer.annotate("serve.decode"):
+                toks, logits, wb = self._dispatch_decode(remaining, n_eff)
         self._absorb_wire(wb)
         self.decode_steps += n_eff
         for t in range(n_eff):
@@ -404,6 +426,7 @@ class ServeEngine:
         if not self.idle:
             raise RuntimeError("reset_stats with requests in flight")
         self.meter = TrafficMeter()
+        self.meter.attach_tracer(self.tracer)
         self._wire_acc = self._zero_wire()
         self.step_idx = 0
         self.decode_steps = 0
@@ -414,10 +437,13 @@ class ServeEngine:
 
     # ------------------------------------------------------------ driver
     def run(self, requests: Sequence[Request], *,
-            max_steps: int = 100_000) -> Dict[str, Any]:
+            max_steps: int = 100_000,
+            on_step=None) -> Dict[str, Any]:
         """Drive a full (arrival-sorted) request trace to completion.
         Deterministic in (engine seed state, trace): scheduling decisions
-        depend only on arrival steps and queue/slot order."""
+        depend only on arrival steps and queue/slot order. `on_step`
+        (engine_step_idx -> None) fires after every step — the launcher's
+        periodic-metrics hook; it must not mutate the engine."""
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
         finished: List[Finished] = []
         t0 = time.perf_counter()
@@ -427,11 +453,28 @@ class ServeEngine:
                 self.submit(pending[i])
                 i += 1
             finished.extend(self.step())
+            if on_step is not None:
+                on_step(self.step_idx)
             if self.step_idx > max_steps:
                 raise RuntimeError(f"workload did not drain in "
                                    f"{max_steps} engine steps")
         wall = time.perf_counter() - t0
         return self.stats(finished, wall)
+
+    def live_stats(self) -> Dict[str, Any]:
+        """Zero-arg counters for mid-run polling (the MetricsRegistry
+        source). Unlike `stats`, needs no finished list or wall clock and
+        never forces a device sync — the wire numbers reflect the last
+        flush, not in-flight accumulators."""
+        return {
+            "step_idx": self.step_idx,
+            "rejected": self.rejected,
+            "tokens_out": self.tokens_out,
+            "decode_steps": self.decode_steps,
+            "prefills": self.prefill_count,
+            "occupancy": self._occupancy_sum / max(1, self.decode_steps),
+            "wire_bytes": self.meter.as_dict(),
+        }
 
     def stats(self, finished: List[Finished], wall_s: float,
               ) -> Dict[str, Any]:

@@ -82,7 +82,7 @@ class PagedServeConfig(ServeConfig):
 class PagedServeEngine(ServeEngine):
     def __init__(self, model: SplitModel, shared_params, bank: TenantBank,
                  cfg: PagedServeConfig, *, collect_logits: bool = False,
-                 mesh=None):
+                 mesh=None, tracer=None):
         reason = model.paged_cache_unsupported()
         if reason is not None:
             raise ValueError(f"{model.cfg.name}: paged serving unsupported "
@@ -93,13 +93,14 @@ class PagedServeEngine(ServeEngine):
             raise ValueError(f"prefill_chunk must be >= 1, "
                              f"got {cfg.prefill_chunk}")
         super().__init__(model, shared_params, bank, cfg,
-                         collect_logits=collect_logits, mesh=mesh)
+                         collect_logits=collect_logits, mesh=mesh,
+                         tracer=tracer)
         ps = cfg.page_size
         self.nb_max = -(-cfg.max_seq // ps)         # blocks per slot table
         self.capacity = self.nb_max * ps            # page-rounded window
         n_pages = (cfg.n_pages if cfg.n_pages is not None
                    else cfg.n_slots * self.nb_max + PagePool.N_RESERVED)
-        self.pool_alloc = PagePool(n_pages, ps)
+        self.pool_alloc = PagePool(n_pages, ps, tracer=self.tracer)
         self.pool = model.init_paged_cache(n_pages, ps, dtype=jnp.float32)
         self.cache = None   # the dense shared cache is replaced by the pool
         self._blank = model.blank_slot_cache(self.capacity,
@@ -251,9 +252,11 @@ class PagedServeEngine(ServeEngine):
         tok = logits = None
         for i in range(0, len(tokens_np), c):
             chunk = tokens_np[i:i + c]
-            tok, logits, cache, wb = self._continue(
-                self.shared, tail, {"tokens": jnp.asarray(chunk[None])},
-                cache, jnp.asarray([start + i], jnp.int32))
+            with self.tracer.span("serve.chunk", level=2,
+                                  start=start + i, n_tokens=len(chunk)):
+                tok, logits, cache, wb = self._continue(
+                    self.shared, tail, {"tokens": jnp.asarray(chunk[None])},
+                    cache, jnp.asarray([start + i], jnp.int32))
             self._absorb_wire(wb)
             self.prefill_chunks += 1
         return tok, logits, cache
@@ -330,9 +333,14 @@ class PagedServeEngine(ServeEngine):
             if entry is None:
                 entry = self._build_prefix_entry(req.tenant)
                 self.prefix_misses += 1
+                self.tracer.event("serve.prefix_miss", level=2,
+                                  tenant=req.tenant,
+                                  prefix_len=entry.prefix_len)
             else:
                 self.prefix_hits += 1
                 entry.hits += 1
+                self.tracer.event("serve.prefix_hit", level=2,
+                                  tenant=req.tenant, hits=entry.hits)
             n_full = len(entry.full_pages)
             for j, pg in enumerate(entry.full_pages):
                 table[j] = self.pool_alloc.share(pg)
@@ -347,6 +355,9 @@ class PagedServeEngine(ServeEngine):
                                             jnp.int32(entry.boundary_page),
                                             jnp.int32(priv[0]))
                 self.page_copies += 1
+                self.tracer.event("page.cow_copy", level=2,
+                                  src=int(entry.boundary_page),
+                                  dst=int(priv[0]), tenant=req.tenant)
             entry.sharers += 1
             self._slot_shared[slot] = req.tenant
             cache = self._gather_slot(self.pool, jnp.asarray(table),
@@ -361,6 +372,9 @@ class PagedServeEngine(ServeEngine):
                                        jnp.asarray(mask))
         self.prefill_count += 1
         self.tokens_out += 1
+        self.tracer.event("serve.admit", rid=req.rid, tenant=req.tenant,
+                          slot=slot, n_blocks=nb_total,
+                          pages_in_use=self.pool_alloc.n_used)
 
         st = _SlotState(req=req,
                         t_submit=self._t_enqueue.pop(
@@ -442,11 +456,20 @@ class PagedServeEngine(ServeEngine):
         self.prefill_step_calls = 0
         self.peak_pages = 0
 
+    def live_stats(self) -> Dict[str, Any]:
+        out = super().live_stats()
+        out.update(self._page_stats())
+        return out
+
     def stats(self, finished: List[Finished], wall_s: float,
               ) -> Dict[str, Any]:
         out = super().stats(finished, wall_s)
+        out.update(self._page_stats())
+        return out
+
+    def _page_stats(self) -> Dict[str, Any]:
         joins = self.prefix_hits + self.prefix_misses
-        out.update({
+        return {
             "page_size": self.cfg.page_size,
             "n_pages": self.pool_alloc.n_pages,
             "pages_in_use": self.pool_alloc.n_used,
@@ -456,5 +479,4 @@ class PagedServeEngine(ServeEngine):
             "prefix_misses": self.prefix_misses,
             "prefix_hit_ratio": self.prefix_hits / joins if joins else 0.0,
             "prefill_chunks": self.prefill_chunks,
-        })
-        return out
+        }

@@ -45,7 +45,7 @@ class PagePool:
     SCRATCH_PAGE = 1
     N_RESERVED = 2
 
-    def __init__(self, n_pages: int, page_size: int):
+    def __init__(self, n_pages: int, page_size: int, *, tracer=None):
         if n_pages < self.N_RESERVED + 1:
             raise ValueError(f"pool needs > {self.N_RESERVED} pages "
                              f"(2 reserved), got {n_pages}")
@@ -57,6 +57,9 @@ class PagePool:
         self._free: List[int] = list(range(n_pages - 1, self.N_RESERVED - 1,
                                            -1))
         self._refcount = [0] * n_pages
+        # flight-recorder hook (repro.obs): step-level page.alloc/share/
+        # free events when attached; pure bookkeeping, never device state
+        self.tracer = tracer
 
     # ------------------------------------------------------------- queries
     @property
@@ -81,6 +84,9 @@ class PagePool:
                 f"page pool exhausted: {self.n_used} pages live, none free")
         pid = self._free.pop()
         self._refcount[pid] = 1
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.event("page.alloc", level=2, page=pid,
+                              n_free=len(self._free))
         return pid
 
     def alloc_many(self, n: int) -> List[int]:
@@ -95,6 +101,9 @@ class PagePool:
         if self._refcount[pid] <= 0:
             raise ValueError(f"share of unallocated page {pid}")
         self._refcount[pid] += 1
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.event("page.share", level=2, page=pid,
+                              refcount=self._refcount[pid])
         return pid
 
     def free(self, pid: int) -> bool:
@@ -105,10 +114,14 @@ class PagePool:
         if self._refcount[pid] <= 0:
             raise ValueError(f"double free of page {pid}")
         self._refcount[pid] -= 1
-        if self._refcount[pid] == 0:
+        released = self._refcount[pid] == 0
+        if released:
             self._free.append(pid)
-            return True
-        return False
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.event("page.free", level=2, page=pid,
+                              released=released,
+                              n_free=len(self._free))
+        return released
 
 
 @dataclass

@@ -83,6 +83,29 @@ def format_sharding_fallbacks(entries) -> str:
             f"{len(entries)} leaf dim(s):\n" + "\n".join(lines))
 
 
+def report_fallbacks(context: str = "", tracer=None) -> tuple:
+    """Drain + surface the recorded fallbacks at one build site.
+
+    The structured path: when a tracer is attached, emit ONE
+    `sharding.fallback` event carrying every drained entry (the drain
+    dedups, so each build site produces its event exactly once per
+    build — pinned by tests/test_obs.py). The `warnings` path stays as
+    the always-on fallback so mis-sized meshes are loud even untraced.
+    Returns the drained (path, axis, shape) tuples."""
+    entries = pop_sharding_fallbacks()
+    if entries:
+        if tracer is not None and tracer.enabled:
+            tracer.event(
+                "sharding.fallback", context=context, n=len(entries),
+                entries=[[path, str(axis), list(shape)]
+                         for path, axis, shape in entries])
+        import warnings
+        prefix = f"[{context}] " if context else ""
+        warnings.warn(prefix + format_sharding_fallbacks(entries),
+                      stacklevel=2)
+    return entries
+
+
 def guard_divisibility(spec: Tuple, shape: Tuple[int, ...],
                        mesh: Mesh, *, path: str = None) -> P:
     """Drop axis assignments whose dim is not divisible by the axis size.

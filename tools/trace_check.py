@@ -1,0 +1,196 @@
+"""Flight-recorder JSONL validator + summarizer (the CI trace gate).
+
+Consumes the `<base>.jsonl` a traced run exports (see repro.obs.export)
+and checks the contract the flight recorder promises:
+
+  schema     every line is a JSON object with `kind` in {span, event},
+             a string `name`, integer `seq`/`depth`, an object `attrs`;
+             spans carry `dur_ns` (host clock) or `dur_sim` + `lane`
+             (simulated clock); host records carry `t_ns`.
+  ordering   `seq` strictly increases line over line (record order IS
+             the order things happened; a ring-buffer wrap may start
+             the file at seq > 0, but never reorders).
+  depth      present on every record and never negative (spans push at
+             exit, so depth — not position — recovers the tree).
+  bytes      for every stream named in the closing `meter.final`
+             record, the left-to-right sum of that stream's values
+             over the `meter.absorb` events equals the final total
+             EXACTLY (==, not allclose) — the meter emitted the same
+             floats it folded, so any drift means dropped or forged
+             records. Skipped with a warning when the ring buffer
+             dropped records (the sum is then legitimately partial)
+             or when no `meter.final` record is present.
+
+Pure stdlib on purpose — CI runs `python tools/trace_check.py <file>`
+(or pipes JSONL on stdin with `-`) without installing the package.
+
+Exit 0 and a one-block summary on success; exit 1 with one line per
+violation otherwise.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import Counter
+from typing import Any, Dict, List, Optional, TextIO
+
+KINDS = ("span", "event")
+
+
+def _err(errors: List[str], line_no: int, msg: str) -> None:
+    errors.append(f"line {line_no}: {msg}")
+
+
+def validate_record(rec: Any, line_no: int, errors: List[str]) -> bool:
+    """Schema for one record; returns False when it is too malformed to
+    feed into the stream checks."""
+    if not isinstance(rec, dict):
+        _err(errors, line_no, f"not a JSON object: {type(rec).__name__}")
+        return False
+    ok = True
+    kind = rec.get("kind")
+    if kind not in KINDS:
+        _err(errors, line_no, f"kind must be one of {KINDS}, got {kind!r}")
+        ok = False
+    if not isinstance(rec.get("name"), str) or not rec.get("name"):
+        _err(errors, line_no, f"name must be a non-empty string, "
+                              f"got {rec.get('name')!r}")
+        ok = False
+    for key in ("seq", "depth"):
+        v = rec.get(key)
+        if not isinstance(v, int) or isinstance(v, bool):
+            _err(errors, line_no, f"{key} must be an int, got {v!r}")
+            ok = False
+    if not isinstance(rec.get("attrs"), dict):
+        _err(errors, line_no, f"attrs must be an object, "
+                              f"got {type(rec.get('attrs')).__name__}")
+        ok = False
+    if isinstance(rec.get("depth"), int) and rec["depth"] < 0:
+        _err(errors, line_no, f"negative depth {rec['depth']}")
+        ok = False
+    sim = "t_sim" in rec
+    if sim and not isinstance(rec["t_sim"], (int, float)):
+        _err(errors, line_no, f"t_sim must be a number, got {rec['t_sim']!r}")
+        ok = False
+    if kind == "span":
+        if sim:
+            if not isinstance(rec.get("dur_sim"), (int, float)):
+                _err(errors, line_no, "sim span needs a numeric dur_sim")
+                ok = False
+            if not isinstance(rec.get("lane"), int):
+                _err(errors, line_no, "sim span needs an integer lane")
+                ok = False
+        elif not isinstance(rec.get("dur_ns"), int):
+            _err(errors, line_no, "host span needs an integer dur_ns")
+            ok = False
+    # meter.final is synthesized at export time and carries no clock;
+    # every recorder-produced record stamps the host clock
+    if (not sim and rec.get("name") != "meter.final"
+            and not isinstance(rec.get("t_ns"), int)):
+        _err(errors, line_no, "host record needs an integer t_ns")
+        ok = False
+    return ok
+
+
+def check_stream(records: List[Dict[str, Any]],
+                 errors: List[str], *, partial: bool) -> Dict[str, float]:
+    """The byte-exactness gate: meter.absorb sums vs meter.final."""
+    final: Optional[Dict[str, Any]] = None
+    for rec in records:
+        if rec.get("name") == "meter.final":
+            final = rec.get("attrs", {})
+    if final is None:
+        return {}
+    totals: Dict[str, float] = {}
+    for stream, want in final.items():
+        if stream == "rounds":
+            continue
+        got = 0.0
+        for rec in records:
+            if rec.get("name") == "meter.absorb":
+                v = rec.get("attrs", {}).get(stream)
+                if v is not None:
+                    got += float(v)
+        totals[stream] = got
+        if partial:
+            continue   # ring dropped records: sums are legitimately short
+        if got != float(want):
+            errors.append(
+                f"stream {stream!r}: meter.absorb events sum to {got!r} "
+                f"but meter.final says {float(want)!r} (must match "
+                f"exactly)")
+    return totals
+
+
+def check(lines: TextIO) -> int:
+    errors: List[str] = []
+    records: List[Dict[str, Any]] = []
+    prev_seq: Optional[int] = None
+    for line_no, line in enumerate(lines, 1):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            _err(errors, line_no, f"invalid JSON: {e}")
+            continue
+        if not validate_record(rec, line_no, errors):
+            continue
+        seq = rec.get("seq")
+        if isinstance(seq, int):
+            if prev_seq is not None and seq <= prev_seq:
+                _err(errors, line_no,
+                     f"seq must strictly increase: {prev_seq} -> {seq}")
+            prev_seq = seq
+        records.append(rec)
+
+    if not records:
+        print("trace_check: no records", file=sys.stderr)
+        return 1
+
+    # a file that starts mid-sequence means the ring buffer wrapped —
+    # absorb sums would be partial, so the exactness gate stands down
+    partial = records[0].get("seq", 0) != 0
+    if partial:
+        print(f"trace_check: WARNING ring buffer wrapped (first seq "
+              f"{records[0]['seq']}); skipping byte-exactness gate",
+              file=sys.stderr)
+    sums = check_stream(records, errors, partial=partial)
+
+    if errors:
+        for e in errors:
+            print(f"trace_check: {e}", file=sys.stderr)
+        print(f"trace_check: FAIL ({len(errors)} violation(s) over "
+              f"{len(records)} records)", file=sys.stderr)
+        return 1
+
+    by_name = Counter(r["name"] for r in records)
+    n_spans = sum(1 for r in records if r["kind"] == "span")
+    n_sim = sum(1 for r in records if "t_sim" in r)
+    print(f"trace_check: OK — {len(records)} records "
+          f"({n_spans} spans, {len(records) - n_spans} events, "
+          f"{n_sim} on the sim clock)")
+    for name, n in sorted(by_name.items()):
+        print(f"  {name:24s} x{n}")
+    if sums:
+        print("  meter streams (bytes, exact vs meter.final):")
+        for stream, total in sorted(sums.items()):
+            print(f"    {stream:22s} {total:.1f}")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print("usage: python tools/trace_check.py <trace.jsonl | ->",
+              file=sys.stderr)
+        return 2
+    if argv[0] == "-":
+        return check(sys.stdin)
+    with open(argv[0]) as f:
+        return check(f)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
